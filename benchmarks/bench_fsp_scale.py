@@ -1,0 +1,93 @@
+"""Distributed-FSP roofline: lower the G.FSP device sweep for a
+paper-scale workload on the production mesh and report the three roofline
+terms (the paper's own workload as a dry-run cell -- §6 future work made
+concrete).
+
+Scale: LinkedSensorData D1D2D3 has 19.2M observations x 4 properties.
+We lower the sweep at that full scale (ShapeDtypeStruct -- no data
+materialization) on the 16x16 mesh.
+
+NOTE: must run in its own process with 512 host devices
+(``python -m benchmarks.bench_fsp_scale``); the aggregate ``run.py``
+driver invokes it as a subprocess so the 1-device benches are unaffected.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def lower_and_report() -> dict:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.distributed import sweep_drop_one
+    from repro.launch import roofline as rl
+    from repro.launch.mesh import make_production_mesh
+
+    n_obs = 19_233_458            # paper Table 1a, D1D2D3 observations
+    n_obs -= n_obs % 256          # row-shard evenly over the mesh
+    k = 4                         # Observation property set size (A4)
+    mesh = make_production_mesh()
+    rows_sh = NamedSharding(mesh, P(("data",), None))
+    rep = NamedSharding(mesh, P())
+    objmat = jax.ShapeDtypeStruct((n_obs, k), jnp.int32)
+    valid = jax.ShapeDtypeStruct((n_obs,), jnp.bool_)
+    am = jax.ShapeDtypeStruct((), jnp.int32)
+    out = []
+    fn = jax.jit(lambda m, v, a: sweep_drop_one(m, v, a, k),
+                 in_shardings=(rows_sh, NamedSharding(mesh, P("data")), rep),
+                 out_shardings=(rep, rep))
+    with mesh:
+        compiled = fn.lower(objmat, valid, am).compile()
+    roof = rl.analyze(compiled, n_chips=256,
+                      model_flops=float(n_obs * k * 64))  # hash+sort work
+    out.append({"bench": "fsp_sweep_sort_D1D2D3_256chips",
+                "n_rows": n_obs, "k": k,
+                "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+                "collective_s": roof.collective_s,
+                "bottleneck": roof.bottleneck,
+                "peak_GB": roof.memory_analysis["peak_bytes"] / 2**30,
+                "collectives": roof.collectives["ops"]})
+
+    # beyond-paper variant: hash-bucket exchange (one all_to_all) instead
+    # of the distributed sort -- see core.distributed.ami_bucketed
+    from repro.core.distributed import ami_bucketed
+
+    def sweep_bucketed(m, v):
+        amis = [ami_bucketed(jnp.delete(m, j, axis=1), v, mesh,
+                             dp_axes=("data",)) for j in range(k)]
+        return jnp.stack(amis)
+
+    fn2 = jax.jit(sweep_bucketed,
+                  in_shardings=(rows_sh, NamedSharding(mesh, P("data"))),
+                  out_shardings=rep)
+    with mesh:
+        compiled2 = fn2.lower(objmat, valid).compile()
+    roof2 = rl.analyze(compiled2, n_chips=256,
+                       model_flops=float(n_obs * k * 64))
+    out.append({"bench": "fsp_sweep_bucketed_D1D2D3_256chips",
+                "n_rows": n_obs, "k": k,
+                "compute_s": roof2.compute_s, "memory_s": roof2.memory_s,
+                "collective_s": roof2.collective_s,
+                "bottleneck": roof2.bottleneck,
+                "peak_GB": roof2.memory_analysis["peak_bytes"] / 2**30,
+                "collectives": roof2.collectives["ops"]})
+    return out
+
+
+def main() -> None:
+    out = lower_and_report()
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                     "bench")
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, "fsp_scale.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: Pallas (interpret) correctness-path timing vs
+the XLA reference; plus the chunked-attention XLA path that the dry-run
+lowers.  On CPU these numbers track Python interpreter overhead for the
+Pallas bodies -- the structural deliverable is the shapes swept + the
+on-TPU dispatch policy, not CPU microseconds."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.star import ami as ami_host, ami_device
+from repro.kernels import ops as kops
+from repro.kernels.chunked_attention import chunked_attention
+from repro.kernels.ref import mha_ref
+
+from .common import report, timeit
+
+
+def run(fast: bool = False) -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # FSP group-by: host vs device (sort+seg) paths
+    for n in (4_096, 65_536) if not fast else (4_096,):
+        mat = rng.integers(0, 50, (n, 4)).astype(np.int32)
+        t_host, a_h = timeit(lambda: ami_host(mat))
+        dev = jnp.asarray(mat)
+        f = jax.jit(lambda m: ami_device(m, use_kernel=False))
+        f(dev).block_until_ready()
+        t_dev, a_d = timeit(lambda: int(f(dev)))
+        assert a_h == a_d
+        rows.append({"bench": f"ami_n{n}", "host_ms": round(t_host, 3),
+                     "device_xla_ms": round(t_dev, 3)})
+
+    # attention: naive vs chunked (the dry-run path), plus grad
+    b, hq, hkv, t, d = 1, 8, 2, 1024, 64
+    q = jnp.asarray(rng.standard_normal((b, hq, t, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, t, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, t, d)), jnp.float32)
+    naive = jax.jit(lambda q, k, v: mha_ref(q, k, v))
+    chunk = jax.jit(lambda q, k, v: chunked_attention(q, k, v, chunk=256))
+    naive(q, k, v).block_until_ready()
+    chunk(q, k, v).block_until_ready()
+    t_n, _ = timeit(lambda: naive(q, k, v).block_until_ready())
+    t_c, _ = timeit(lambda: chunk(q, k, v).block_until_ready())
+    np.testing.assert_allclose(naive(q, k, v), chunk(q, k, v),
+                               atol=2e-5, rtol=2e-5)
+    rows.append({"bench": f"attn_T{t}", "host_ms": round(t_n, 3),
+                 "device_xla_ms": round(t_c, 3)})
+
+    # linear scan (RG-LRU / SSD inter-chunk)
+    bt, tt, w = 4, 512, 256
+    x = jnp.asarray(rng.standard_normal((bt, tt, w)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.8, 0.99, (bt, tt, w)), jnp.float32)
+    ls = jax.jit(lambda x, a: kops.linear_scan(x, a)[1])
+    ls(x, a).block_until_ready()
+    t_l, _ = timeit(lambda: ls(x, a).block_until_ready())
+    rows.append({"bench": f"linear_scan_T{tt}", "host_ms": "",
+                 "device_xla_ms": round(t_l, 3)})
+
+    report("kernels_micro", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

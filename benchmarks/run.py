@@ -1,0 +1,33 @@
+"""Benchmark driver: one module per paper table/figure + kernel micro +
+the distributed-FSP roofline cell.  ``python -m benchmarks.run [--fast]``.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import time
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from . import (bench_formula, bench_fsp_efficiency, bench_kernels,
+                   bench_nodes_edges, bench_repeats, bench_savings)
+    t0 = time.time()
+    bench_fsp_efficiency.run(fast)      # Table 3
+    bench_formula.run(fast)             # Table 4
+    bench_savings.run(fast)             # Table 5
+    bench_repeats.run(fast)             # Figure 8
+    bench_nodes_edges.run(fast)         # Figure 9
+    bench_kernels.run(fast)             # kernels
+    if not fast:
+        # separate process: needs 512 host devices before jax init
+        r = subprocess.run([sys.executable, "-m",
+                            "benchmarks.bench_fsp_scale"],
+                           capture_output=True, text=True, timeout=1800)
+        print(r.stdout[-2000:] if r.returncode == 0
+              else f"fsp_scale FAILED:\n{r.stderr[-2000:]}")
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Distributed FSP detection (paper §6 future work, made concrete).
+
+    PYTHONPATH=src python examples/distributed_fsp.py
+
+Runs G.FSP three ways on the same graph and checks they agree:
+  host (paper-faithful) / device batched sweep / mesh-sharded sweep.
+The production-mesh lowering of the sweep (512 devices) is exercised by
+``benchmarks/bench_fsp_scale.py`` -- this example stays 1-device.
+"""
+import time
+
+from repro.core import gfsp
+from repro.core.distributed import gfsp_distributed
+from repro.data.synthetic import SensorGraphSpec, generate
+
+store = generate(SensorGraphSpec(n_observations=8000, seed=11))
+cid = store.dict.lookup("ssn:Observation")
+
+t0 = time.perf_counter()
+host = gfsp(store, cid)
+t_host = time.perf_counter() - t0
+
+t0 = time.perf_counter()
+dev = gfsp(store, cid, device_sweep=True)
+t_dev = time.perf_counter() - t0
+
+t0 = time.perf_counter()
+dist = gfsp_distributed(store, cid)
+t_dist = time.perf_counter() - t0
+
+names = [store.dict.term(p) for p in host.props]
+assert set(host.props) == set(dev.props) == set(dist.props)
+assert host.edges == dev.edges == dist.edges
+print(f"FSP over {names}: #Edges={host.edges}, {host.n_fsp} patterns")
+print(f"host      {t_host * 1e3:8.1f} ms")
+print(f"device    {t_dev * 1e3:8.1f} ms   (batched candidate sweep)")
+print(f"sharded   {t_dist * 1e3:8.1f} ms   (row-sharded; 1 device here)")
+print("all three agree — distributed_fsp OK")

@@ -1,0 +1,45 @@
+"""Quickstart: the paper's full pipeline on a LinkedSensorData-style graph.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. generate a synthetic SSN sensor graph (paper §5 datasets);
+2. detect frequent star patterns with G.FSP (Algorithm 2);
+3. factorize them into compact RDF molecules (Algorithm 3);
+4. verify the factorized graph is smaller AND lossless (Def. 4.10/4.11);
+5. answer the same query on both graphs via instanceOf-aware rewriting.
+"""
+import numpy as np
+
+from repro.core import (factorize, gfsp, match_star, semantic_triples)
+from repro.data.synthetic import SensorGraphSpec, generate
+
+store = generate(SensorGraphSpec(n_observations=3000, seed=7))
+print(f"original graph: {store.n_triples} triples, {store.n_nodes} nodes")
+
+for cname in ("ssn:Observation", "ssn:Measurement"):
+    cid = store.dict.lookup(cname)
+    res = gfsp(store, cid)
+    names = [store.dict.term(p) for p in res.props]
+    print(f"\n{cname}: G.FSP found {res.n_fsp} frequent star patterns over "
+          f"{names}\n  #Edges={res.edges}  iterations={res.iterations}  "
+          f"time={res.exec_time_ms:.1f}ms")
+
+    fact = factorize(store, cid, res.props)
+    print(f"  factorized: NLE {fact.nle_before} -> {fact.nle_after} "
+          f"({fact.pct_savings_nle:+.1f}% savings)")
+
+    # losslessness: axiom expansion of G' == semantic closure of G
+    a, b = semantic_triples(store), semantic_triples(fact.graph)
+    assert a.shape == b.shape and (a == b).all()
+    print("  lossless: axiom expansion reproduces the original graph")
+
+    # query both graphs: who measured value val/0?
+    if cname == "ssn:Measurement":
+        v = store.dict.lookup("val/0")
+        p = store.dict.lookup("ssn:value")
+        orig = np.sort(match_star(store, [(p, v)], rewrite=False))
+        new = np.sort(match_star(fact.graph, [(p, v)], rewrite=True))
+        assert (orig == new).all() and orig.size > 0
+        print(f"  query 'value=val/0': {orig.size} matches on both graphs")
+
+print("\nquickstart OK")

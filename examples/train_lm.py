@@ -1,0 +1,31 @@
+"""End-to-end LM training with the production substrate on CPU.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch qwen2-0.5b] [--steps 200]
+
+Trains a reduced same-family config for a few hundred steps with the full
+stack engaged -- deterministic sharded pipeline, AdamW + cosine schedule,
+async atomic checkpointing, resume-from-checkpoint -- and asserts the
+loss actually falls.  On a TPU slice, drop --reduced to train the full
+config on the production mesh (launch/dryrun.py proves those lowerings).
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2-0.5b")
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+args = ap.parse_args()
+
+out = train_main(["--arch", args.arch, "--reduced",
+                  "--steps", str(args.steps), "--batch", "8",
+                  "--seq", "64", "--lr", "3e-3",
+                  "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+                  "--log-every", "20"])
+drop = out["first_loss"] - out["final_loss"]
+print(f"\nloss {out['first_loss']:.3f} -> {out['final_loss']:.3f} "
+      f"(drop {drop:.3f})")
+if drop <= 0:
+    sys.exit("loss did not decrease")

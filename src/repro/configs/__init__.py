@@ -1,0 +1,23 @@
+"""Config registry: ``--arch <id>`` resolution for every assigned
+architecture (plus reduced smoke-test variants)."""
+from __future__ import annotations
+
+from .base import ArchConfig, reduced  # noqa: F401
+from .shapes import SHAPES, ShapeSpec, applicable  # noqa: F401
+
+from . import (dbrx_132b, internvl2_2b, llama3_2_1b, llama3_405b,
+               mamba2_780m, moonshot_v1_16b_a3b, qwen2_0_5b, qwen3_32b,
+               recurrentgemma_2b, whisper_medium)
+
+ARCHS: dict[str, ArchConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (qwen2_0_5b, llama3_2_1b, qwen3_32b, llama3_405b, mamba2_780m,
+              recurrentgemma_2b, whisper_medium, dbrx_132b,
+              moonshot_v1_16b_a3b, internvl2_2b)
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]

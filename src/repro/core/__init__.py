@@ -1,0 +1,9 @@
+"""Core of the paper's contribution: frequent-star-pattern detection and
+RDF graph factorization (Karim, Vidal & Auer 2020)."""
+from .triples import TermDict, TripleStore, RDF_TYPE, INSTANCE_OF  # noqa: F401
+from .star import (ami, multiplicities, num_edges, evaluate_subset,  # noqa: F401
+                   star_groups, row_groups, StarSweepResult)
+from .gfsp import gfsp, FSPResult  # noqa: F401
+from .efsp import efsp, build_subgraphs_dict  # noqa: F401
+from .factorize import factorize, factorize_classes, FactorizationResult  # noqa: F401
+from .axioms import expand, semantic_triples, match_star  # noqa: F401

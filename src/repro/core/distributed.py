@@ -1,0 +1,206 @@
+"""Distributed FSP detection on the production mesh (paper §6 future work).
+
+The FSP inner loop is a group-by-signature + count-distinct over the
+(entities x |SP|) object matrix.  On the 512-chip mesh:
+
+* rows (entities) are sharded over the combined DP axes ("pod", "data");
+* each device hashes its rows with the Pallas signature kernel
+  (``kernels/sig_hash``), giving fixed-width 64-bit keys;
+* AMI = number of distinct signatures = global sort + segment-boundary
+  count.  The sort runs under GSPMD, which lowers it to a distributed
+  sort (all-to-all exchanges) -- the TPU-idiomatic replacement for the
+  paper's host hash map;
+* G.FSP's per-iteration sweep over all |SP| one-property-removed subsets
+  is DATA-PARALLEL across candidates (the paper iterates them
+  sequentially): one vmapped lowering evaluates every candidate at once.
+
+``gfsp_distributed`` runs the greedy descent of Algorithm 2 with this
+device sweep, and is validated against the host implementation
+(tests/test_distributed_fsp.py).  ``benchmarks/bench_fsp_scale.py``
+lowers the sweep on the production mesh and reports its roofline terms
+(the paper's own workload, deliverable g).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .star import ami_device, edges_formula_device
+from .triples import TripleStore
+
+
+def pad_rows(objmat: np.ndarray, multiple: int) -> tuple[np.ndarray, int]:
+    """Pad the row count to a multiple of the DP degree (sentinel rows)."""
+    n = objmat.shape[0]
+    pad = (-n) % multiple
+    if pad:
+        sentinel = np.full((pad, objmat.shape[1]), -1, objmat.dtype)
+        objmat = np.concatenate([objmat, sentinel], axis=0)
+    return objmat, n
+
+
+@functools.partial(jax.jit, static_argnames=("n_s", "use_kernel"))
+def sweep_drop_one(objmat, valid, am, n_s: int, use_kernel: bool = True):
+    """Evaluate all |SP| one-property-removed candidate subsets at once.
+
+    objmat: (n, k) int32 (row-sharded); valid: (n,) bool (padding mask).
+    Returns (edges (k,), amis (k,)) for candidate j = SP minus property j.
+    """
+    n, k = objmat.shape
+    keep = jnp.stack([jnp.delete(jnp.arange(k), j, assume_unique_indices=True)
+                      for j in range(k)])              # (k, k-1) static
+    stacked = jnp.take(objmat, keep.T, axis=1)         # (n, k-1, k)
+    stacked = stacked.transpose(2, 0, 1)               # (k, n, k-1)
+    amis = jax.vmap(
+        lambda m: ami_device(m, valid=valid, use_kernel=use_kernel))(stacked)
+    edges = edges_formula_device(amis, am, k - 1, n_s)
+    return edges, amis
+
+
+@functools.partial(jax.jit, static_argnames=("n_s", "n_sp", "use_kernel"))
+def eval_subset_device(objmat, valid, am, n_sp: int, n_s: int,
+                       use_kernel: bool = True):
+    a = ami_device(objmat, valid=valid, use_kernel=use_kernel)
+    return edges_formula_device(a, am, n_sp, n_s), a
+
+
+def shard_rows(objmat: np.ndarray, mesh) -> jax.Array:
+    """Place the object matrix row-sharded over every non-"model" axis."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    return jax.device_put(objmat, NamedSharding(mesh, P(dp, None)))
+
+
+def gfsp_distributed(store: TripleStore, class_id: int, *, mesh=None,
+                     use_kernel: bool = True):
+    """Algorithm 2 (G.FSP) with the mesh-sharded device sweep.
+
+    Control flow mirrors ``core.gfsp.gfsp`` exactly (same stop criteria,
+    same tie-breaking; asserted equal in tests/test_distributed_fsp.py);
+    each greedy sweep evaluates all candidates in one sharded lowering.
+    """
+    import time
+
+    from .gfsp import FSPResult
+    from .star import star_groups
+
+    t0 = time.perf_counter()
+    stats = store.class_stats(class_id)
+    props = [int(p) for p in stats.properties]
+    am = stats.n_instances
+    n_s = len(props)
+    ents, objmat = store.object_matrix(class_id, props)
+    dp = 1
+    if mesh is not None:
+        dp = int(np.prod([s for a, s in zip(mesh.axis_names,
+                                            mesh.devices.shape)
+                          if a != "model"]))
+    objmat, n_real = pad_rows(objmat.astype(np.int32), max(dp, 1))
+    dev = (shard_rows(objmat, mesh) if mesh is not None
+           else jnp.asarray(objmat))
+    valid = jnp.arange(dev.shape[0]) < n_real
+
+    sp_idx = list(range(n_s))
+    iterations, evaluations = 0, 1
+    f_cur, ami_cur = eval_subset_device(dev, valid, am, n_s, n_s,
+                                        use_kernel)
+    f_cur, ami_cur = int(f_cur), int(ami_cur)
+
+    def _finish():
+        chosen = tuple(props[i] for i in sp_idx)
+        fsp = star_groups(store, class_id, chosen)
+        return FSPResult(
+            class_id=class_id, props=chosen, edges=f_cur, ami=ami_cur,
+            am=am, iterations=iterations, evaluations=evaluations,
+            exec_time_ms=(time.perf_counter() - t0) * 1e3, fsp=fsp)
+
+    while True:
+        iterations += 1
+        if len(sp_idx) < 2 or ami_cur == 1:
+            return _finish()
+        if len(sp_idx) < 3:        # children would have < 2 properties
+            return _finish()
+        edges, amis = sweep_drop_one(dev, valid, am, n_s, use_kernel)
+        edges, amis = np.asarray(edges), np.asarray(amis)
+        evaluations += len(sp_idx)
+        single = np.where(amis == 1)[0]
+        j = int(single[0]) if single.size else int(np.argmin(edges))
+        if int(edges[j]) >= f_cur:
+            if single.size and int(edges[j]) < f_cur:
+                pass               # unreachable; kept for symmetry
+            return _finish()
+        f_cur, ami_cur = int(edges[j]), int(amis[j])
+        del sp_idx[j]
+        dev = jnp.delete(dev, j, axis=1)
+
+
+def ami_bucketed(objmat, valid, mesh, *, dp_axes=("data",),
+                 cap_factor: float = 4.0, use_kernel: bool = True):
+    """Distinct-row count via hash-bucket exchange (shard_map).
+
+    The sort-based AMI is exact but a distributed sort exchanges the data
+    over O(log^2 S) merge rounds (bench_fsp_scale baseline: 3035 s of
+    collectives at D1D2D3 scale).  Here every signature moves ONCE: each
+    shard routes signatures to their hash-owner with one all_to_all
+    (static per-destination capacity; uniform murmur hashes make a 4x
+    headroom overflow probability ~Poisson-tail negligible, and overflow
+    is detected and summed so exactness violations are observable), the
+    owner dedups locally, and a psum merges counts.
+
+    objmat: (n, k) int32 row-sharded over ``dp_axes``; valid: (n,) bool.
+    Returns () int32 AMI.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels import ops as kops
+
+    n_shards = 1
+    for a, s_ in zip(mesh.axis_names, mesh.devices.shape):
+        if a in dp_axes:
+            n_shards *= s_
+
+    def body(mat, val):
+        nl = mat.shape[0]
+        sig = kops.row_signature(mat, use_kernel=use_kernel)  # (nl,2) u32
+        sentinel = jnp.uint32(0xFFFFFFFF)
+        sig = jnp.where(val[:, None], sig, sentinel)
+        owner = (sig[:, 0] % jnp.uint32(n_shards)).astype(jnp.int32)
+        owner = jnp.where(val, owner, n_shards)       # invalid -> overflow
+        cap = max(int(cap_factor * nl / n_shards) + 8, 8)
+        order = jnp.argsort(owner)
+        owner_s = owner[order]
+        sig_s = sig[order]
+        starts = jnp.searchsorted(owner_s, jnp.arange(n_shards))
+        pos = jnp.arange(nl) - starts[jnp.minimum(owner_s, n_shards - 1)]
+        keep = (owner_s < n_shards) & (pos < cap)
+        dropped = jnp.sum((owner_s < n_shards) & (pos >= cap))
+        # cap+1: slot ``cap`` is the dump slot for non-kept entries --
+        # dumping them at (0, 0) would overwrite a real signature
+        buf = jnp.full((n_shards, cap + 1, 2), sentinel, jnp.uint32)
+        buf = buf.at[jnp.where(keep, owner_s, 0),
+                     jnp.where(keep, pos, cap)].set(
+            jnp.where(keep[:, None], sig_s, sentinel))
+        buf = buf[:, :cap]
+        # one exchange: shard i sends row j of buf to shard j
+        recv = jax.lax.all_to_all(buf, dp_axes, split_axis=0,
+                                  concat_axis=0, tiled=True)
+        flat = recv.reshape(-1, 2)
+        sig_sorted, _ = kops.sort_signatures(flat)
+        bounds, n_groups = kops.seg_boundaries(sig_sorted,
+                                               use_kernel=use_kernel)
+        has_sent = jnp.any(jnp.all(sig_sorted == sentinel, axis=1))
+        local_distinct = n_groups - has_sent.astype(jnp.int32)
+        total = jax.lax.psum(local_distinct, dp_axes)
+        total = total + jax.lax.psum(dropped, dp_axes)  # upper-bound fix
+        return total
+
+    spec_m = P(dp_axes, None)
+    spec_v = P(dp_axes)
+    # check_vma=False: pallas_call outputs do not carry vma metadata yet
+    return jax.shard_map(body, mesh=mesh, in_specs=(spec_m, spec_v),
+                         out_specs=P(), check_vma=False)(objmat, valid)

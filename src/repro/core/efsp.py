@@ -1,0 +1,104 @@
+"""E.FSP -- Algorithm 1: exhaustive frequent-star-pattern detection.
+
+E.FSP consumes the frequent-pattern space enumerated by gSpan over the RDF
+molecules of a class (``subgraphsDict``: property subset -> the star
+subgraphs over that subset), then breadth-first scans all property subsets
+of cardinality ``|S| .. 2`` keeping the subset whose subgraphs minimize the
+Def. 4.8 edge objective.  Complexity is O(2^n) in the number of class
+properties -- the pattern space itself is exponential, which is exactly the
+cost G.FSP avoids (paper reports >= 3 orders of magnitude).
+
+``subgraphsDict`` construction: gSpan patterns over star molecules are
+star-shaped DFS codes rooted at the class vertex; each pattern fixes a set
+of properties and one object tuple.  Grouping patterns by their property
+set yields the dictionary of Algorithm 1; the number of patterns per subset
+is AMI, and countEdges follows Def. 4.8 (see note in ``star.py`` on the
+prose/definition discrepancy in the paper's walkthrough).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Sequence
+
+import numpy as np
+
+from .gfsp import FSPResult
+from .gspan import mine, molecules_of_class
+from .star import num_edges, star_groups
+from .triples import TripleStore
+
+
+def build_subgraphs_dict(store: TripleStore, class_id: int,
+                         min_support: int = 1,
+                         max_edges: int | None = None):
+    """Enumerate the gSpan pattern space and bucket star patterns by
+    property subset.
+
+    Returns ``(subgraphs_dict, n_patterns, entities)`` where
+    ``subgraphs_dict[frozenset(props)] = list[(object_tuple, support)]``.
+    """
+    ents, graphs = molecules_of_class(store, class_id)
+    patterns = mine(graphs, min_support=min_support, max_edges=max_edges)
+    subgraphs: dict[frozenset, list[tuple[tuple, int]]] = {}
+    for pat in patterns:
+        # star pattern rooted at the class vertex: every edge is a forward
+        # edge (0, k, class, p, 1, o)
+        if not all(t[0] == 0 and t[4] == 1 for t in pat.code):
+            continue
+        props = tuple(sorted(t[3] for t in pat.code))
+        if len(set(props)) != len(props):
+            continue  # functional-property duplicates are not star patterns
+        objs = tuple(o for _, o in sorted((t[3], t[5]) for t in pat.code))
+        subgraphs.setdefault(frozenset(props), []).append((objs, pat.support))
+    return subgraphs, len(patterns), ents
+
+
+def efsp(store: TripleStore, class_id: int,
+         props: Sequence[int] | None = None,
+         min_support: int = 1,
+         subgraphs_dict=None) -> FSPResult:
+    """Run E.FSP for ``class_id``; returns the same result type as G.FSP."""
+    t0 = time.perf_counter()
+    stats = store.class_stats(class_id)
+    s_all = (np.asarray(list(props), np.int32)
+             if props is not None else stats.properties)
+    n_s = int(s_all.shape[0])
+    am = stats.n_instances
+
+    if subgraphs_dict is None:
+        subgraphs_dict, _, _ = build_subgraphs_dict(
+            store, class_id, min_support=min_support)
+
+    best_sp: tuple[int, ...] | None = None
+    best_edges = 0
+    best_ami = 0
+    iterations = 0
+    evaluations = 0
+    subset_card = n_s
+    s_list = [int(p) for p in s_all]
+    while subset_card >= 2:
+        iterations += 1
+        for combo in itertools.combinations(s_list, subset_card):
+            key = frozenset(combo)
+            subgraphs = subgraphs_dict.get(key, [])
+            evaluations += 1
+            # countEdges(subgraphs): the factorized edge count of Def. 4.8 --
+            # one star (|SP|+1 edges) per pattern + untouched properties.
+            a = len(subgraphs)
+            total_edges = num_edges(a, am, subset_card, n_s)
+            if best_sp is None or total_edges < best_edges:
+                best_edges = total_edges
+                best_sp = tuple(sorted(combo))
+                best_ami = a
+        subset_card -= 1
+
+    if best_sp is None:
+        best_sp, best_ami, best_edges = (), 0, 0
+        fsp = []
+    else:
+        fsp = star_groups(store, class_id, best_sp)
+    return FSPResult(
+        class_id=class_id, props=best_sp, edges=best_edges, ami=best_ami,
+        am=am, iterations=iterations, evaluations=evaluations,
+        exec_time_ms=(time.perf_counter() - t0) * 1e3, fsp=fsp)

@@ -1,0 +1,216 @@
+"""Dictionary-encoded RDF triple store.
+
+The paper (Karim et al. 2020) operates on RDF graphs ``G = (V, E, L)``
+(Def. 4.2).  Like every production RDF engine (HDT, k2-triples, ...), we
+dictionary-encode terms at ingest: URIs / literals become dense int32 ids, and
+the graph is a single ``(n, 3)`` COO array of ``(subject, property, object)``
+ids.  All downstream computation (multiplicity, AMI, #Edges, factorization)
+is vectorized over these arrays, which is also the layout we ship to device.
+
+Two ids are reserved with well-known terms:
+  * ``rdf:type``           -- the class-membership property (paper: "type")
+  * ``repro:instanceOf``   -- the surrogate-link property added by
+                              factorization (paper Def. 4.10/4.11)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+RDF_TYPE = "rdf:type"
+INSTANCE_OF = "repro:instanceOf"
+
+
+class TermDict:
+    """Bidirectional term <-> id dictionary (host side)."""
+
+    __slots__ = ("_terms", "_index")
+
+    def __init__(self) -> None:
+        self._terms: list[str] = []
+        self._index: dict[str, int] = {}
+
+    def id(self, term: str) -> int:
+        """Return the id of ``term``, allocating one if unseen."""
+        i = self._index.get(term)
+        if i is None:
+            i = len(self._terms)
+            self._index[term] = i
+            self._terms.append(term)
+        return i
+
+    def lookup(self, term: str) -> int | None:
+        return self._index.get(term)
+
+    def term(self, i: int) -> str:
+        return self._terms[i]
+
+    def __len__(self) -> int:
+        return len(self._terms)
+
+    def __contains__(self, term: str) -> bool:
+        return term in self._index
+
+
+@dataclasses.dataclass
+class ClassStats:
+    """Per-class statistics used throughout the paper's formulas."""
+
+    class_id: int
+    n_instances: int          # AM_G(C) -- Def. 4.8
+    properties: np.ndarray    # sorted property ids with domain C (excl. type)
+
+
+class TripleStore:
+    """An RDF graph as dictionary-encoded COO triples.
+
+    ``spo`` is an ``(n, 3)`` int32 array; row ``(s, p, o)`` is the RDF triple
+    / labeled edge of Def. 4.1/4.2.  Duplicate triples are removed (an RDF
+    graph is a *set* of triples).
+    """
+
+    def __init__(self, dictionary: TermDict | None = None,
+                 spo: np.ndarray | None = None) -> None:
+        self.dict = dictionary if dictionary is not None else TermDict()
+        self.TYPE = self.dict.id(RDF_TYPE)
+        self.INSTANCE_OF = self.dict.id(INSTANCE_OF)
+        if spo is None:
+            spo = np.empty((0, 3), dtype=np.int32)
+        self.spo = np.asarray(spo, dtype=np.int32).reshape(-1, 3)
+        self._dedup()
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_triples(cls, triples: Iterable[tuple[str, str, str]]) -> "TripleStore":
+        store = cls()
+        d = store.dict
+        rows = [(d.id(s), d.id(p), d.id(o)) for s, p, o in triples]
+        store.spo = np.asarray(rows, dtype=np.int32).reshape(-1, 3)
+        store._dedup()
+        return store
+
+    @classmethod
+    def from_ids(cls, dictionary: TermDict, spo: np.ndarray) -> "TripleStore":
+        return cls(dictionary, spo)
+
+    def add_ids(self, rows: np.ndarray) -> None:
+        rows = np.asarray(rows, dtype=np.int32).reshape(-1, 3)
+        self.spo = np.concatenate([self.spo, rows], axis=0)
+        self._dedup()
+
+    def _dedup(self) -> None:
+        if len(self.spo):
+            self.spo = np.unique(self.spo, axis=0)
+
+    def restrict_subjects(self, subjects: np.ndarray) -> "TripleStore":
+        """Subgraph of triples whose subject is in ``subjects`` (shared
+        dictionary) -- the paper evaluates each observation type as its
+        own graph."""
+        mask = np.isin(self.spo[:, 0], np.asarray(subjects))
+        return TripleStore.from_ids(self.dict, self.spo[mask])
+
+    # -- size metrics (paper §5, "Metrics") --------------------------------
+    @property
+    def n_triples(self) -> int:
+        return int(self.spo.shape[0])
+
+    def nodes(self) -> np.ndarray:
+        """Distinct entity/object nodes (NN numerator)."""
+        if not len(self.spo):
+            return np.empty((0,), np.int32)
+        return np.unique(np.concatenate([self.spo[:, 0], self.spo[:, 2]]))
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.nodes().shape[0])
+
+    @property
+    def size(self) -> int:
+        """Graph size = #nodes + #edges (paper §5 'Metrics')."""
+        return self.n_nodes + self.n_triples
+
+    # -- class / schema access ---------------------------------------------
+    def entities_of_class(self, class_id: int) -> np.ndarray:
+        mask = (self.spo[:, 1] == self.TYPE) & (self.spo[:, 2] == class_id)
+        return np.unique(self.spo[mask, 0])
+
+    def classes(self) -> np.ndarray:
+        return np.unique(self.spo[self.spo[:, 1] == self.TYPE, 2])
+
+    def class_properties(self, class_id: int) -> np.ndarray:
+        """Sorted property ids whose domain includes class C (excl. type &
+        instanceOf)."""
+        ents = self.entities_of_class(class_id)
+        mask = np.isin(self.spo[:, 0], ents)
+        props = np.unique(self.spo[mask, 1])
+        return props[(props != self.TYPE) & (props != self.INSTANCE_OF)]
+
+    def class_stats(self, class_id: int) -> ClassStats:
+        ents = self.entities_of_class(class_id)
+        return ClassStats(class_id=class_id, n_instances=int(ents.shape[0]),
+                          properties=self.class_properties(class_id))
+
+    # -- molecule access -----------------------------------------------------
+    def object_matrix(self, class_id: int, props: Sequence[int],
+                      strict: bool = False) -> tuple[np.ndarray, np.ndarray]:
+        """Entities x objects matrix for a (class, property-set) pair.
+
+        Returns ``(entities, objmat)`` with ``objmat[i, j]`` = object of
+        ``props[j]`` on ``entities[i]``.  The paper's algorithms assume RDF
+        molecules are *complete* (every entity has a value for every property)
+        and properties are *functional* (one value each) -- assumption (a)/(b)
+        of §4.3.  We validate: entities violating either assumption are
+        excluded from the candidate set (``strict=True`` raises instead).
+        """
+        props = np.asarray(list(props), dtype=np.int32)
+        ents = self.entities_of_class(class_id)
+        if ents.size == 0 or props.size == 0:
+            return ents[:0], np.empty((0, props.size), np.int32)
+        # edges whose subject is an instance of C and property in props
+        sel = np.isin(self.spo[:, 0], ents) & np.isin(self.spo[:, 1], props)
+        s, p, o = self.spo[sel].T
+        ent_idx = np.searchsorted(ents, s)
+        order = np.argsort(props, kind="stable")     # props may be unsorted
+        prop_pos = order[np.searchsorted(props[order], p)]
+        # count (entity, property) pairs to detect non-functional properties
+        flat = ent_idx.astype(np.int64) * props.size + prop_pos
+        objmat = np.full((ents.size, props.size), -1, dtype=np.int32)
+        counts = np.bincount(flat, minlength=ents.size * props.size)
+        ok_pairs = counts.reshape(ents.size, props.size) == 1
+        complete = ok_pairs.all(axis=1)
+        if strict and not complete.all():
+            bad = ents[~complete]
+            raise ValueError(
+                f"{bad.size} entities of class {class_id} violate the "
+                "complete-molecule/functional-property assumption")
+        objmat[ent_idx, prop_pos] = o
+        return ents[complete], objmat[complete]
+
+    def labeled_edge_count(self, class_id: int,
+                           props: Sequence[int] | None = None) -> int:
+        """NLE: labeled edges annotated with class properties (paper §5)."""
+        ents = self.entities_of_class(class_id)
+        mask = np.isin(self.spo[:, 0], ents)
+        if props is not None:
+            mask &= np.isin(self.spo[:, 1], np.asarray(list(props), np.int32))
+        else:
+            mask &= self.spo[:, 1] != self.TYPE
+        return int(mask.sum())
+
+    # -- convenience ---------------------------------------------------------
+    def triples_as_terms(self) -> list[tuple[str, str, str]]:
+        t = self.dict.term
+        return [(t(s), t(p), t(o)) for s, p, o in self.spo.tolist()]
+
+    def copy(self) -> "TripleStore":
+        new = TripleStore.__new__(TripleStore)
+        new.dict = self.dict          # term dict is shared (append-only)
+        new.TYPE = self.TYPE
+        new.INSTANCE_OF = self.INSTANCE_OF
+        new.spo = self.spo.copy()
+        return new
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"TripleStore(n_triples={self.n_triples}, n_nodes={self.n_nodes})"

@@ -1,0 +1,1 @@
+"""Data plane: synthetic RDF benchmarks, factorized storage, LM pipeline."""

@@ -1,0 +1,68 @@
+"""Factorized corpus store: the paper's compaction on the data plane.
+
+Training corpora (and LM-serving prompt logs) contain many EXACTLY
+repeated rows -- boilerplate documents, templated prompts, duplicated
+web pages.  A row-store of such a corpus is an RDF-graph-shaped object:
+
+  entity   = row index            property = column (token position)
+  object   = token id             star pattern = a distinct row
+
+``FactorizedStore`` applies Algorithm 3 at the row granularity: distinct
+rows become compact molecules (stored once), each original row keeps an
+``instanceOf`` pointer (int32).  ``#Edges`` (Def. 4.8) in bytes decides
+whether factorization pays (Fig. 7 overhead case: near-unique corpora are
+stored flat).
+
+Reads are a single gather -- no decompression pass (the paper's key
+property vs [16]); the gather composes with the host->device transfer so
+repeated rows cross PCIe once per unique row per batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.star import row_groups
+
+
+@dataclasses.dataclass
+class FactorizedStore:
+    molecules: np.ndarray | None      # (M, L) unique rows (None: flat)
+    instance_of: np.ndarray | None    # (N,) row -> molecule
+    flat: np.ndarray | None           # unfactorized fallback
+    bytes_original: int
+    bytes_stored: int
+
+    @classmethod
+    def build(cls, rows: np.ndarray, ptr_bytes: int = 4) -> "FactorizedStore":
+        rows = np.asarray(rows)
+        n, length = rows.shape
+        item = rows.dtype.itemsize
+        original = n * length * item
+        inv, counts, rep = row_groups(rows)
+        m = counts.shape[0]
+        factorized = m * length * item + n * ptr_bytes
+        if factorized >= original:                  # overhead case (Fig. 7)
+            return cls(None, None, rows, original, original)
+        return cls(rows[rep], inv.astype(np.int32), None, original,
+                   factorized)
+
+    @property
+    def savings_pct(self) -> float:
+        return 100.0 * (1 - self.bytes_stored / max(self.bytes_original, 1))
+
+    @property
+    def n_rows(self) -> int:
+        if self.flat is not None:
+            return self.flat.shape[0]
+        return self.instance_of.shape[0]
+
+    def __getitem__(self, idx) -> np.ndarray:
+        if self.flat is not None:
+            return self.flat[idx]
+        return self.molecules[self.instance_of[idx]]
+
+    def batch(self, idx: np.ndarray) -> np.ndarray:
+        """Gather a batch; device path sends unique molecules once."""
+        return self[np.asarray(idx)]

@@ -1,0 +1,157 @@
+"""Synthetic LinkedSensorData-style RDF graphs (paper §5 datasets).
+
+The paper evaluates on LinkedSensorData (SSN ontology): weather observations
+with ``property / procedure / generatedBy / time`` edges and linked
+measurements with ``value / unit`` edges.  The original dumps are not
+redistributable offline, so this module regenerates graphs with the same
+schema, the same A1-A10 property sets, and matched repetition statistics:
+
+  * ``procedure``/``generatedBy`` are symmetric (same sensor object);
+  * measurement values follow a Zipf law, so a few values are highly
+    repeated (paper Fig. 8);
+  * ``unit`` is functionally determined by the phenomenon (9 phenomena).
+
+Scale is controlled by ``n_observations``; per-class property sets mirror
+Table 2 (A1..A7 for Observation, A8..A10 for Measurement).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.triples import TripleStore
+
+PHENOMENA = ["Temperature", "WindSpeed", "WindDirection", "RelativeHumidity",
+             "Visibility", "Precipitation", "Pressure", "Rainfall", "Snowfall"]
+
+OBSERVATION = "ssn:Observation"
+MEASUREMENT = "ssn:Measurement"
+P_PROPERTY = "ssn:observedProperty"
+P_PROCEDURE = "ssn:procedure"
+P_GENERATED_BY = "ssn:generatedBy"
+P_TIME = "ssn:samplingTime"
+P_RESULT = "ssn:observationResult"
+P_VALUE = "ssn:value"
+P_UNIT = "ssn:unit"
+
+# Table 2 property sets
+PROPERTY_SETS = {
+    "A1": (OBSERVATION, [P_PROPERTY]),
+    "A2": (OBSERVATION, [P_TIME]),
+    "A3": (OBSERVATION, [P_PROCEDURE, P_GENERATED_BY]),
+    "A4": (OBSERVATION, [P_PROPERTY, P_PROCEDURE, P_GENERATED_BY, P_TIME]),
+    "A5": (OBSERVATION, [P_PROPERTY, P_PROCEDURE, P_GENERATED_BY]),
+    "A6": (OBSERVATION, [P_PROPERTY, P_TIME]),
+    "A7": (OBSERVATION, [P_PROCEDURE, P_TIME, P_GENERATED_BY]),
+    "A8": (MEASUREMENT, [P_VALUE, P_UNIT]),
+    "A9": (MEASUREMENT, [P_VALUE]),
+    "A10": (MEASUREMENT, [P_UNIT]),
+}
+
+
+@dataclasses.dataclass
+class SensorGraphSpec:
+    n_observations: int = 2000
+    n_sensors: int = 20
+    n_timestamps: int = 50
+    n_values: int = 40            # distinct measurement values
+    zipf_a: float = 1.8           # value repetition skew (Fig. 8 shape)
+    seed: int = 0
+    include_result_links: bool = True
+
+
+def generate(spec: SensorGraphSpec) -> TripleStore:
+    rng = np.random.default_rng(spec.seed)
+    n = spec.n_observations
+    phen = rng.integers(0, len(PHENOMENA), n)
+    sensor = rng.integers(0, spec.n_sensors, n)
+    tstamp = rng.integers(0, spec.n_timestamps, n)
+    # Zipf-distributed value ids, clipped to the distinct-value budget
+    vals = np.minimum(rng.zipf(spec.zipf_a, n) - 1, spec.n_values - 1)
+
+    triples: list[tuple[str, str, str]] = []
+    for i in range(n):
+        obs = f"obs/{i}"
+        meas = f"meas/{i}"
+        sens = f"sensor/{sensor[i]}"
+        triples.append((obs, "rdf:type", OBSERVATION))
+        triples.append((obs, P_PROPERTY, f"phenom/{PHENOMENA[phen[i]]}"))
+        triples.append((obs, P_PROCEDURE, sens))
+        triples.append((obs, P_GENERATED_BY, sens))
+        triples.append((obs, P_TIME, f"time/{tstamp[i]}"))
+        if spec.include_result_links:
+            triples.append((obs, P_RESULT, meas))
+        triples.append((meas, "rdf:type", MEASUREMENT))
+        triples.append((meas, P_VALUE, f"val/{vals[i]}"))
+        triples.append((meas, P_UNIT, f"unit/{PHENOMENA[phen[i]]}"))
+    return TripleStore.from_triples(triples)
+
+
+def property_set_ids(store: TripleStore, sid: str) -> tuple[int, list[int]]:
+    """Resolve a Table-2 SID to (class_id, property_ids) in a store."""
+    cname, props = PROPERTY_SETS[sid]
+    cid = store.dict.lookup(cname)
+    if cid is None:
+        raise KeyError(f"class {cname} not in store")
+    pids = []
+    for p in props:
+        pid = store.dict.lookup(p)
+        if pid is None:
+            raise KeyError(f"property {p} not in store")
+        pids.append(pid)
+    return cid, pids
+
+
+def figure1_graph() -> TripleStore:
+    """The paper's motivating example (Figure 1a), exactly.
+
+    c1..c4 of class C share (p1 e1), (p2 e2), (p3 e3); p4 objects: c1->e4,
+    c2->e4, c3->e5, c4->e6 (multiplicities 2, 1, 1 -> AMI({p4}) = 3,
+    matching §4.2's walkthrough).  20 triples total (16 property edges +
+    4 type edges).
+    """
+    t = []
+    for c in ["c1", "c2", "c3", "c4"]:
+        t.append((c, "rdf:type", "C"))
+        t.append((c, "p1", "e1"))
+        t.append((c, "p2", "e2"))
+        t.append((c, "p3", "e3"))
+    t.append(("c1", "p4", "e4"))
+    t.append(("c2", "p4", "e4"))
+    t.append(("c3", "p4", "e5"))
+    t.append(("c4", "p4", "e6"))
+    return TripleStore.from_triples(t)
+
+
+def figure7a_graph() -> TripleStore:
+    """Paper Figure 7a: factorization pays off (savings > 0).
+
+    5 entities of C each carrying the same objects over p1, p2, p3 and a
+    distinct object over p4: 20 property edges; factorizing {p1,p2,p3}
+    replaces 15 edges by 4 (star) + 5 (instanceOf) = 9 -> saves 6 edges.
+    """
+    t = []
+    for i in range(5):
+        c = f"c{i}"
+        t.append((c, "rdf:type", "C"))
+        t.append((c, "p1", "e1"))
+        t.append((c, "p2", "e2"))
+        t.append((c, "p3", "e3"))
+        t.append((c, "p4", f"u{i}"))
+    return TripleStore.from_triples(t)
+
+
+def figure7b_graph() -> TripleStore:
+    """Paper Figure 7b flavor: factorization overhead (savings < 0).
+
+    9 entities in 9 distinct (p1, p2) object pairs -- every star pattern has
+    multiplicity 1, so factorization only adds surrogates/instanceOf edges.
+    """
+    t = []
+    for i in range(9):
+        c = f"c{i}"
+        t.append((c, "rdf:type", "C"))
+        t.append((c, "p1", f"a{i}"))
+        t.append((c, "p2", f"b{i}"))
+    return TripleStore.from_triples(t)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel module pairs with a pure-jnp oracle in ``ref.py``; ``ops.py``
+holds the jit'd dispatch wrappers.  Kernels target TPU (BlockSpec VMEM
+tiling) and are validated on CPU via ``interpret=True``.
+"""

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: GQA flash attention (online softmax, blocked).
+
+Grid is ``(B, Hq, nQ, nKV)`` with the KV dimension sequential ("arbitrary"
+semantics): running max ``m``, denominator ``l`` and the output accumulator
+live in VMEM scratch across KV steps (the classic Mosaic flash pattern).
+Query/key blocks are MXU-aligned (TQ, TKV multiples of 128 for real shapes;
+tests sweep smaller interpret-mode shapes).
+
+GQA is expressed in the BlockSpec index maps: the key/value block for query
+head ``h`` is ``h // (Hq // Hkv)`` -- no repeat/materialization of KV heads.
+
+Causal + sliding-window masking is applied inside the block; the wrapper
+offsets query positions by ``S - T`` so the same kernel serves train
+(S == T), prefill, and chunked decode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TQ = 128
+DEFAULT_TKV = 128
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  sm_scale: float, causal: bool, window: int | None,
+                  q_offset: int, n_kv: int, tq: int, tkv: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (TQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (TKV, D)
+    v = v_ref[0, 0].astype(jnp.float32)            # (TKV, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    qpos = iq * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tkv), 0) \
+        + q_offset
+    kpos = ik * tkv + jax.lax.broadcasted_iota(jnp.int32, (tq, tkv), 1)
+    mask = jnp.ones((tq, tkv), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+
+    s_masked = jnp.where(mask, s, _NEG)
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s_masked, axis=1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "sm_scale", "window", "tq", "tkv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sm_scale: float | None = None, window: int | None = None,
+                    tq: int = DEFAULT_TQ, tkv: int = DEFAULT_TKV,
+                    interpret: bool = True):
+    """q: (B, Hq, T, D); k, v: (B, Hkv, S, D) -> (B, Hq, T, D)."""
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    tq = min(tq, t)
+    tkv = min(tkv, s)
+    t_pad = -t % tq
+    s_pad = -s % tkv
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+    n_q = qp.shape[2] // tq
+    n_kv = kp.shape[2] // tkv
+    grid = (b, hq, n_q, n_kv)
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        q_offset=s - t, n_kv=n_kv, tq=tq, tkv=tkv)
+    try:
+        params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+    except Exception:  # pragma: no cover - older pltpu naming
+        params = None
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, tkv, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, tkv, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((tq,), jnp.float32),
+                        pltpu.VMEM((tq,), jnp.float32),
+                        pltpu.VMEM((tq, d), jnp.float32)],
+        compiler_params=params,
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :t]

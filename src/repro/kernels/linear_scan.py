@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: blocked diagonal linear recurrence.
+
+Computes ``h_t = a_t * h_{t-1} + x_t`` over the time axis -- the state
+update shared by mamba2's SSD (scalar-per-head decay broadcast over the
+(d_head x d_state) state, flattened into D) and recurrentgemma's RG-LRU
+(per-channel gate).
+
+Within a VMEM time-block the recurrence is evaluated with an associative
+prefix scan (log-depth on the VPU); the cross-block state is carried in
+VMEM scratch across the sequential time grid dimension:
+
+  combine((a_l, x_l), (a_r, x_r)) = (a_l * a_r, a_r * x_l + x_r)
+  h_block = A_prefix * h_carry + X_prefix
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TT = 256
+
+
+def _scan_kernel(x_ref, a_ref, h0_ref, h_ref, carry_ref, *, n_t: int):
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        carry_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)        # (TT, D)
+    a = a_ref[0].astype(jnp.float32)        # (TT, D)
+
+    def combine(l, r):
+        al, xl = l
+        ar, xr = r
+        return al * ar, ar * xl + xr
+
+    a_pre, x_pre = jax.lax.associative_scan(combine, (a, x), axis=0)
+    h = a_pre * carry_ref[...][None, :] + x_pre
+    h_ref[0] = h.astype(h_ref.dtype)
+    carry_ref[...] = h[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("tt", "interpret"))
+def linear_scan(x, a, h0=None, *, tt: int = DEFAULT_TT,
+                interpret: bool = True):
+    """x, a: (B, T, D); h0: (B, D) -> ((B, T, D) states, (B, D) final)."""
+    b, t, d = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, d), x.dtype)
+    tt = min(tt, t)
+    t_pad = -t % tt
+    # pad with a=1, x=0 (identity elements) so padding never alters state
+    xp = jnp.pad(x, ((0, 0), (0, t_pad), (0, 0)))
+    ap = jnp.pad(a, ((0, 0), (0, t_pad), (0, 0)), constant_values=1)
+    n_t = xp.shape[1] // tt
+    grid = (b, n_t)
+    try:
+        params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    except Exception:  # pragma: no cover
+        params = None
+    hs = pl.pallas_call(
+        functools.partial(_scan_kernel, n_t=n_t),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, tt, d), lambda bi, ti: (bi, ti, 0)),
+                  pl.BlockSpec((1, tt, d), lambda bi, ti: (bi, ti, 0)),
+                  pl.BlockSpec((1, d), lambda bi, ti: (bi, 0))],
+        out_specs=pl.BlockSpec((1, tt, d), lambda bi, ti: (bi, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((d,), jnp.float32)],
+        compiler_params=params,
+        interpret=interpret,
+    )(xp, ap, h0)
+    hs = hs[:, :t]
+    return hs, hs[:, -1].astype(x.dtype)

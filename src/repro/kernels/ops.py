@@ -1,0 +1,89 @@
+"""jit'd dispatch wrappers over the Pallas kernels with pure-jnp fallbacks.
+
+Selection policy:
+  * On a TPU runtime the compiled Pallas kernels are used directly.
+  * On CPU (this container, CI) kernels run in ``interpret=True`` mode for
+    correctness validation; callers that feed the *dry-run* lowering use the
+    XLA reference path (``impl="xla"``) so cost analysis reflects the
+    XLA-compiled graph rather than the interpreter scaffolding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .chunked_attention import chunked_attention as _chunked
+from .flash_attention import flash_attention as _flash
+from .linear_scan import linear_scan as _linear_scan
+from .seg_count import seg_boundaries as _seg_boundaries
+from .sig_hash import sig_hash as _sig_hash
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# -- FSP group-by -----------------------------------------------------------
+
+def row_signature(mat, use_kernel: bool = True):
+    """(N, K) int -> (N, 2) uint32 signature lanes (hi, lo)."""
+    if mat.ndim != 2:
+        raise ValueError(f"expected (N, K) matrix, got {mat.shape}")
+    if use_kernel:
+        return _sig_hash(mat, interpret=_interpret())
+    return ref.row_signature_ref(mat)
+
+
+def seg_boundaries(sig_sorted, use_kernel: bool = True):
+    """Sorted (N, 2) sigs -> ((N,) boundaries, () segment count)."""
+    if use_kernel:
+        return _seg_boundaries(sig_sorted, interpret=_interpret())
+    b = ref.seg_boundaries_ref(sig_sorted)
+    return b, b.sum()
+
+
+def sort_signatures(sig):
+    """Lexicographic sort of (N, 2) uint32 signatures; returns (sorted, order).
+
+    Two uint32 lanes replace one uint64 key (TPU-friendly: no 64-bit lanes);
+    jnp.lexsort keys are last-key-primary.
+    """
+    order = jnp.lexsort((sig[:, 1], sig[:, 0]))
+    return sig[order], order
+
+
+# -- attention / recurrence --------------------------------------------------
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              sm_scale: float | None = None, impl: str = "xla",
+              group_spec=None, **tiles):
+    """GQA attention dispatch.
+
+    impl: xla (flash-equivalent chunked scan above 1k keys, naive below --
+    the dry-run lowers this path so cost analysis reflects what XLA would
+    run) | xla_naive | pallas | pallas_interpret (TPU kernel).
+    """
+    if impl == "xla":
+        if k.shape[2] > 1024:
+            return _chunked(q, k, v, causal=causal, window=window,
+                            sm_scale=sm_scale, group_spec=group_spec)
+        return ref.mha_ref(q, k, v, causal=causal, window=window,
+                           sm_scale=sm_scale)
+    if impl == "xla_naive":
+        return ref.mha_ref(q, k, v, causal=causal, window=window,
+                           sm_scale=sm_scale)
+    if impl == "xla_chunked":
+        return _chunked(q, k, v, causal=causal, window=window,
+                        sm_scale=sm_scale, group_spec=group_spec)
+    interpret = impl == "pallas_interpret" or _interpret()
+    return _flash(q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+                  interpret=interpret, **tiles)
+
+
+def linear_scan(x, a, h0=None, *, impl: str = "xla", **tiles):
+    """Diagonal linear recurrence dispatch; returns (states, final)."""
+    if impl == "xla":
+        return ref.linear_scan_ref(x, a, h0)
+    interpret = impl == "pallas_interpret" or _interpret()
+    return _linear_scan(x, a, h0, interpret=interpret, **tiles)

@@ -1,0 +1,129 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function is the numerical ground truth the kernels are tested
+against (tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+The signature-hash reference is bit-exact (integer math); attention/scan
+references are float references with dtype-appropriate tolerances.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# murmur3-style row signatures (FSP group-by hot spot)
+# ---------------------------------------------------------------------------
+
+# plain python ints (cast at trace time inside the kernel body -- jnp-array
+# module constants would be "captured consts", which pallas_call rejects)
+_C1 = 0xcc9e2d51
+_C2 = 0x1b873593
+_FM1 = 0x85ebca6b
+_FM2 = 0xc2b2ae35
+_SEED_HI = 0x9e3779b9
+
+
+def _rotl32(x, r: int):
+    return (x << r) | (x >> (32 - r))
+
+
+def _fmix32(h):
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(_FM1)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(_FM2)
+    return h ^ (h >> 16)
+
+
+def _mm3_step(h, k):
+    k = k * jnp.uint32(_C1)
+    k = _rotl32(k, 15)
+    k = k * jnp.uint32(_C2)
+    h = h ^ k
+    h = _rotl32(h, 13)
+    return h * jnp.uint32(5) + jnp.uint32(0xe6546b64)
+
+
+def row_signature_ref(mat: jax.Array) -> jax.Array:
+    """(N, K) int32 -> (N, 2) uint32 murmur3 row hashes (two lanes).
+
+    Lane 0 is seeded with 0, lane 1 with the golden ratio; together they
+    form a 64-bit signature whose collision probability is ~N^2/2^64.
+    """
+    x = mat.astype(jnp.uint32)
+    n, k = x.shape
+    h_lo = jnp.zeros((n,), jnp.uint32)
+    h_hi = jnp.full((n,), jnp.uint32(_SEED_HI))
+    for j in range(k):
+        h_lo = _mm3_step(h_lo, x[:, j])
+        h_hi = _mm3_step(h_hi, x[:, j] ^ jnp.uint32(0xdeadbeef))
+    h_lo = _fmix32(h_lo ^ jnp.uint32(k))
+    h_hi = _fmix32(h_hi ^ jnp.uint32(k))
+    return jnp.stack([h_hi, h_lo], axis=1)
+
+
+def seg_boundaries_ref(sig_sorted: jax.Array) -> jax.Array:
+    """(N, 2) sorted signatures -> (N,) int32; 1 where a new segment starts."""
+    diff = jnp.any(sig_sorted[1:] != sig_sorted[:-1], axis=1)
+    return jnp.concatenate([jnp.ones((1,), jnp.int32),
+                            diff.astype(jnp.int32)])
+
+
+# ---------------------------------------------------------------------------
+# GQA flash attention (prefill/train hot spot)
+# ---------------------------------------------------------------------------
+
+def mha_ref(q, k, v, causal: bool = True, sm_scale: float | None = None,
+            window: int | None = None):
+    """Reference grouped-query attention.
+
+    q: (B, Hq, T, D); k, v: (B, Hkv, S, D) with Hq % Hkv == 0.
+    ``window``: optional local-attention window (RG-LRU hybrid blocks).
+    """
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * sm_scale
+    # positions: queries occupy the last t slots of the s-long history
+    qpos = jnp.arange(t)[:, None] + (s - t)
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# diagonal linear recurrence (mamba2 SSD / RG-LRU hot spot)
+# ---------------------------------------------------------------------------
+
+def linear_scan_ref(x, a, h0=None):
+    """h_t = a_t * h_{t-1} + x_t  over axis 1.
+
+    x, a: (B, T, D); h0: (B, D) initial state.  Returns (h_all, h_last):
+    (B, T, D) states and the (B, D) final state.  Computed in float32.
+    """
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    b, t, d = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, d), jnp.float32)
+
+    def step(h, xa):
+        xt, at = xa
+        h = at * h + xt
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                              (xf.swapaxes(0, 1), af.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(x.dtype), h_last

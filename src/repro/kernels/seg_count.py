@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: segment boundaries over sorted signatures.
+
+After sorting the (N, 2) uint32 signatures produced by ``sig_hash``, the
+group-by reduces to marking rows that differ from their predecessor.  AMI
+(Def. 4.7) is the sum of the boundary vector; per-segment lengths give the
+class multiplicities (Def. 4.5).
+
+The kernel is a blocked elementwise compare between the signature block and
+the one-row-shifted block (the wrapper materializes the shift, so no
+cross-block halo exchange is needed); each VMEM block also emits its partial
+boundary count so AMI can be accumulated without re-reading HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 2048
+
+
+def _seg_kernel(cur_ref, prev_ref, bound_ref, partial_ref):
+    cur = cur_ref[...]
+    prev = prev_ref[...]
+    diff = jnp.any(cur != prev, axis=1).astype(jnp.int32)
+    bound_ref[...] = diff
+    partial_ref[...] = jnp.sum(diff, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def seg_boundaries(sig_sorted: jax.Array, interpret: bool = True
+                   ) -> tuple[jax.Array, jax.Array]:
+    """(N, 2) sorted sigs -> ((N,) int32 boundaries, () int32 n_segments)."""
+    n = sig_sorted.shape[0]
+    # prev[i] = sig[i-1]; row 0 compares against ~sig[0] so it always differs
+    prev = jnp.concatenate([~sig_sorted[:1], sig_sorted[:-1]], axis=0)
+    n_pad = -n % TILE_N
+    cur_p = jnp.pad(sig_sorted, ((0, n_pad), (0, 0)))
+    # pad prev with the same values as cur so padded rows never count
+    prev_p = jnp.pad(prev, ((0, n_pad), (0, 0)))
+    if n_pad:
+        cur_tail = cur_p[n:]
+        prev_p = prev_p.at[n:].set(cur_tail)
+    grid = (cur_p.shape[0] // TILE_N,)
+    bounds, partials = pl.pallas_call(
+        _seg_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_N, 2), lambda i: (i, 0)),
+                  pl.BlockSpec((TILE_N, 2), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((TILE_N,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((cur_p.shape[0],), jnp.int32),
+                   jax.ShapeDtypeStruct((grid[0],), jnp.int32)],
+        interpret=interpret,
+    )(cur_p, prev_p)
+    return bounds[:n], partials.sum()

@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines: jax locks the device count at first init.
+# This gives the dry-run 512 placeholder host devices for the production
+# meshes; smoke tests / benches import other modules and see 1 device.
+#
+# Multi-pod dry-run (deliverable e): for every (architecture x input shape)
+# cell, build the jit'd train/prefill/decode step with explicit in/out
+# shardings on the production mesh, ``.lower().compile()`` it, and record
+# memory_analysis / cost_analysis / collective stats for EXPERIMENTS.md.
+#
+#   python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh single
+#   python -m repro.launch.dryrun --all --mesh both      # full 40-cell sweep
+#   python -m repro.launch.dryrun --list
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, applicable, get_arch
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def input_specs(arch: str, shape: str = "train_4k") -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of one cell
+    (weak-type-correct, shardable, no device allocation)."""
+    import jax.numpy as jnp
+    from repro.models.lm import LM
+    from repro.train.serve_step import decode_input_specs
+    from repro.train.train_step import batch_specs
+
+    cfg = get_arch(arch)
+    sp = SHAPES[shape]
+    model = LM(cfg)
+    if sp.kind == "train":
+        return batch_specs(cfg, sp.global_batch, sp.seq_len)
+    if sp.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct(
+            (sp.global_batch, sp.seq_len), jnp.int32)}
+        if cfg.frontend != "none":
+            fd = cfg.frontend_dim or cfg.d_model
+            out["frontend"] = jax.ShapeDtypeStruct(
+                (sp.global_batch, cfg.frontend_tokens, fd),
+                jnp.dtype(cfg.dtype))
+        return out
+    return decode_input_specs(model, sp.global_batch, sp.seq_len)
+
+
+def build_cell(arch: str, shape: str, *, multi_pod: bool,
+               overrides: dict | None = None):
+    """Returns (jitted_fn, example_args) ready to .lower(*args)."""
+    import dataclasses as dc
+
+    from repro.dist import sharding as sh
+    from repro.models.blocks import Ctx
+    from repro.models.common import specs_to_shapes
+    from repro.models.lm import LM
+    from repro.train import (make_decode_step, make_optimizer,
+                             make_prefill_step, make_train_step)
+    from repro.train.train_step import batch_specs
+
+    cfg = get_arch(arch)
+    if overrides:
+        cfg = dc.replace(cfg, **overrides)
+    sp = SHAPES[shape]
+    ok, reason = applicable(cfg, sp)
+    if not ok:
+        raise SystemExit(reason)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = sh.make_plan(cfg, mesh)
+    model = LM(cfg)
+    micro = max(sp.global_batch // (cfg.grad_accum if sp.kind == "train"
+                                    else 1), 1)
+    aspec = sh.act_spec(plan, micro, decode=(sp.kind == "decode"),
+                        seq=sp.seq_len)
+    # SP boundary: tp archs gather seq to feed TP sublayers; no-TP archs
+    # keep seq sharded end to end (weights are replicated -- gathering
+    # would just replicate compute over the model axis)
+    gspec = (sh.act_spec(plan, micro, decode=True) if cfg.tp
+             else aspec)                             # seq gathered (SP edge)
+    q_spec, kv_spec, grp_spec = sh.qkv_specs(plan, cfg, micro,
+                                             seq=sp.seq_len)
+    ctx = Ctx(cfg=cfg, attn_impl="xla", scan_impl="xla", act_spec=aspec,
+              gather_spec=gspec, q_spec=q_spec, kv_spec=kv_spec,
+              group_spec=grp_spec,
+              moe_impl="shard_map" if cfg.n_experts else "ragged",
+              mesh=mesh)
+    param_specs = model.param_specs()
+    p_sh = sh.tree_shardings(plan, param_specs)
+    lspec = sh.layer_compute_specs(plan, param_specs["layers"])
+    espec = (sh.layer_compute_specs(plan, param_specs["encoder"]["layers"])
+             if cfg.encoder_layers else None)
+    ctx = dc.replace(ctx, layer_param_specs=lspec, enc_param_specs=espec)
+
+    if sp.kind == "train":
+        opt = make_optimizer(cfg)
+        step_fn = make_train_step(model, opt, ctx=ctx,
+                                  grad_accum=cfg.grad_accum,
+                                  grad_shardings=p_sh)
+        state_shapes = sh.train_state_shapes(cfg, model)
+        state_sh = sh.train_state_shardings(plan, cfg, param_specs)
+        batch = batch_specs(cfg, sp.global_batch, sp.seq_len)
+        batch_sh = sh.batch_tree_shardings(plan, batch)
+        fn = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=0)
+        return fn, (state_shapes, batch), mesh, plan
+
+    params = specs_to_shapes(param_specs)
+    if sp.kind == "prefill":
+        pf = make_prefill_step(model, ctx=ctx, cache_len=sp.seq_len)
+        cache_sh = sh.tree_shardings(
+            plan, model.cache_specs(sp.global_batch, sp.seq_len))
+        ins = input_specs(arch, shape)
+        tok_sh = sh.batch_sharding(plan, sp.global_batch)
+        in_sh = [p_sh, tok_sh] + ([tok_sh] if "frontend" in ins else [])
+        args = [params, ins["tokens"]] + (
+            [ins["frontend"]] if "frontend" in ins else [])
+        fn = jax.jit(pf, in_shardings=tuple(in_sh),
+                     out_shardings=(tok_sh, cache_sh))
+        return fn, tuple(args), mesh, plan
+
+    # decode
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models import blocks as blk
+    if cfg.n_kv_heads:
+        # sequence-sharded KV cache -> shard_map flash-decode (chunking a
+        # sharded S inside jit makes GSPMD reshard the cache per chunk)
+        window = cfg.window if "local" in cfg.pattern else None
+        kts = blk.attn_cache_specs(cfg, sp.global_batch, sp.seq_len,
+                                   cfg.dtype, window=window)
+        kspec = sh.spec_for(plan, kts["k"])
+        if len(kspec) > 2 and kspec[2] == "model":
+            ctx = dc.replace(ctx, decode_kv_specs=(
+                P(kspec[0], None, None, None), kspec,
+                P(kspec[0], "model")))
+    dec = make_decode_step(model, ctx=ctx)
+    ins = input_specs(arch, shape)
+    cache_sh = sh.tree_shardings(
+        plan, model.cache_specs(sp.global_batch, sp.seq_len))
+    tok_sh = sh.batch_sharding(plan, sp.global_batch)
+    fn = jax.jit(dec,
+                 in_shardings=(p_sh, tok_sh, cache_sh, tok_sh),
+                 out_shardings=(tok_sh, cache_sh), donate_argnums=2)
+    args = (params, ins["tokens"], ins["cache"], ins["positions"])
+    return fn, args, mesh, plan
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             overrides: dict | None = None, tag: str = "",
+             hlo_dir: str | None = None) -> dict:
+    cfg = get_arch(arch)
+    sp = SHAPES[shape]
+    ok, reason = applicable(cfg, sp)
+    cell = {"arch": arch, "shape": shape, "mesh": mesh_kind, "tag": tag}
+    if not ok:
+        return {**cell, "status": "skip", "reason": reason}
+    multi = mesh_kind == "multi"
+    n_chips = 512 if multi else 256
+    t0 = time.time()
+    try:
+        fn, args, mesh, plan = build_cell(arch, shape, multi_pod=multi,
+                                          overrides=overrides)
+        with mesh:   # ambient mesh: with_sharding_constraint hints bind here
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        if hlo_dir:   # persist the artifact: analysis is replayable
+            import gzip
+            suffix = f"__{tag}" if tag else ""
+            name = f"{arch}__{shape}__{mesh_kind}{suffix}.hlo.gz"
+            with gzip.open(os.path.join(hlo_dir, name), "wt") as f:
+                f.write(compiled.as_text())
+        mf = rl.model_flops_estimate(cfg, sp.global_batch, sp.seq_len,
+                                     sp.kind)
+        roof = rl.analyze(compiled, n_chips=n_chips, model_flops=mf)
+        return {**cell, "status": "ok", "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+                "fallbacks": sorted(set(plan.fallbacks)),
+                "roofline": roof.to_json()}
+    except Exception as e:  # noqa: BLE001 -- sweep must survive bad cells
+        return {**cell, "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+
+
+def all_cells(mesh_kinds) -> list[tuple[str, str, str]]:
+    cells = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mk in mesh_kinds:
+                cells.append((arch, shape, mk))
+    return cells
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--override", default="",
+                    help="JSON dict of ArchConfig overrides (perf sweeps)")
+    ap.add_argument("--tag", default="", help="suffix for the output json")
+    args = ap.parse_args()
+    kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.list:
+        for arch, shape, mk in all_cells(kinds):
+            ok, reason = applicable(get_arch(arch), SHAPES[shape])
+            print(f"{arch:24s} {shape:12s} {mk:6s} "
+                  f"{'ok' if ok else reason}")
+        return 0
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.all:
+        # subprocess per cell: isolates compile OOM/crash, bounds RAM
+        import subprocess
+        failures = 0
+        for arch, shape, mk in all_cells(kinds):
+            name = f"{arch}__{shape}__{mk}"
+            path = os.path.join(args.out, name + ".json")
+            if os.path.exists(path):
+                st = json.load(open(path)).get("status")
+                if st in ("ok", "skip"):
+                    print(f"cached  {name}: {st}")
+                    continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mk,
+                   "--out", args.out]
+            t0 = time.time()
+            try:
+                r = subprocess.run(cmd, timeout=args.timeout,
+                                   capture_output=True, text=True)
+                if r.returncode != 0 and not os.path.exists(path):
+                    json.dump({"arch": arch, "shape": shape, "mesh": mk,
+                               "status": "error",
+                               "error": (r.stderr or "")[-2000:]},
+                              open(path, "w"), indent=1)
+            except subprocess.TimeoutExpired:
+                json.dump({"arch": arch, "shape": shape, "mesh": mk,
+                           "status": "timeout"}, open(path, "w"), indent=1)
+            res = json.load(open(path))
+            status = res.get("status")
+            failures += status not in ("ok", "skip")
+            print(f"{time.time() - t0:7.1f}s {name}: {status}")
+        return 1 if failures else 0
+
+    overrides = json.loads(args.override) if args.override else None
+    res = run_cell(args.arch, args.shape, args.mesh, overrides, args.tag,
+                   hlo_dir=args.out)
+    suffix = f"__{args.tag}" if args.tag else ""
+    name = f"{args.arch}__{args.shape}__{args.mesh}{suffix}.json"
+    with open(os.path.join(args.out, name), "w") as f:
+        json.dump(res, f, indent=1)
+    r = res.get("roofline", {})
+    print(json.dumps({k: v for k, v in res.items()
+                      if k not in ("roofline", "traceback")}, indent=1))
+    if r:
+        print(f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+              f"collective={r['collective_s']:.4f}s "
+              f"bottleneck={r['bottleneck']} "
+              f"roofline_fraction={r['roofline_fraction']:.3f}")
+        print("mem/device GB:",
+              round(r["memory_analysis"]["peak_bytes"] / 2**30, 2))
+    return 0 if res.get("status") in ("ok", "skip") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,407 @@
+"""Loop-aware cost model over compiled (post-SPMD) HLO text.
+
+WHY.  ``compiled.cost_analysis()`` counts a ``while`` body ONCE, but our
+stacks scan over layers (and attention scans over key chunks, grad-accum
+over microbatches) -- so flops/bytes/collective traffic inside loops are
+undercounted by the trip count (24-126x).  This module parses the HLO
+text, rebuilds the computation call graph, extracts loop trip counts from
+the ``while`` condition (compare-against-constant pattern emitted for
+``lax.scan``/``fori_loop``), and accumulates:
+
+  flops       -- 2 * prod(result_dims) * prod(contracting_dims) per dot,
+                 multiplied through enclosing loops;
+  bytes       -- operand + result bytes per materializing op (fusions count
+                 their boundary only: internals are register/VMEM traffic);
+  link_bytes  -- ring-model collective traffic (same models as roofline.py).
+
+The result is the input to the roofline terms.  Validated against
+hand-computed matmul counts in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+                    r"((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+                    r"([\w\-]+)\((.*)$")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^)]*\)|[a-z0-9]+"
+                       r"\[[0-9,]*\](?:\{[^}]*\})?))")
+_CALLEE_RE = re.compile(r"(?:to_apply|body|condition|calls|"
+                        r"branch_computations)=\{?%?([\w\.\-,% ]+)\}?")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "while", "conditional", "call", "iota",
+               "after-all", "partition-id", "replica-id"}
+
+
+def shape_elems(type_str: str) -> int:
+    n_total = 0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        n_total += n
+    return n_total
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    var: str
+    type_str: str
+    kind: str
+    rest: str                    # operand list + attributes (raw tail)
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    ops: list[Op] = dataclasses.field(default_factory=list)
+    shapes: dict[str, str] = dataclasses.field(default_factory=dict)
+    param_order: list[str] = dataclasses.field(default_factory=list)
+
+
+def parse(text: str) -> tuple[dict[str, Comp], str]:
+    comps: dict[str, Comp] = {}
+    entry = ""
+    cur: Comp | None = None
+    for line in text.splitlines():
+        if cur is None:
+            if "->" in line and "{" in line and "=" not in line.split("(")[0]:
+                m = _COMP_HDR.match(line.strip())
+                if m:
+                    cur = Comp(m.group(1))
+                    if line.strip().startswith("ENTRY"):
+                        entry = cur.name
+                    # bind parameter shapes from the signature (in order)
+                    sig = line[line.index("("):]
+                    for pname, ptype in _PARAM_RE.findall(sig):
+                        cur.shapes[pname] = ptype
+                        cur.param_order.append(pname)
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            var, type_str, kind, rest = m.groups()
+            cur.shapes[var] = type_str
+            cur.ops.append(Op(var, type_str, kind, rest))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _operands(rest: str) -> list[str]:
+    depth = 0
+    out = []
+    for tok in re.finditer(r"[(),]|%[\w\.\-]+", rest):
+        t = tok.group(0)
+        if t == "(":
+            depth += 1
+        elif t == ")":
+            depth -= 1
+            if depth < 0:
+                break
+        elif t.startswith("%") and depth >= 0:
+            out.append(t[1:])
+    return out
+
+
+def trip_count(cond: Comp, comps: dict[str, "Comp"] | None = None) -> int:
+    """Extract N from the compare-to-constant loop condition.
+
+    The compare may live inside a fusion called from the condition; loop
+    conditions are tiny, so "max integer constant reachable from the
+    condition" is a safe and robust trip-count proxy (counted-down loops
+    still carry the bound constant for the induction init)."""
+    consts: list[int] = []
+    comp_stack = [cond]
+    seen = {cond.name}
+    while comp_stack:
+        c = comp_stack.pop()
+        for op in c.ops:
+            if op.kind == "constant":
+                m = re.search(r"^\((-?\d+)\)", "(" + op.rest)
+                if m:
+                    consts.append(int(m.group(1)))
+            elif op.kind == "fusion" and comps is not None:
+                m = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+                if m and m.group(1) in comps and m.group(1) not in seen:
+                    seen.add(m.group(1))
+                    comp_stack.append(comps[m.group(1)])
+    return max(consts + [1])
+
+
+def _dot_flops(op: Op, shapes: dict[str, str]) -> float:
+    res = shape_elems(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    operands = _operands(op.rest)
+    if not m or not operands:
+        return 2.0 * res            # unknown: treat as elementwise-ish
+    lhs_shape = shape_dims(shapes.get(operands[0], ""))
+    k = 1
+    for idx in m.group(1).split(","):
+        if idx and int(idx) < len(lhs_shape):
+            k *= lhs_shape[int(idx)]
+    return 2.0 * res * k
+
+
+def _coll_link_bytes(op: Op) -> float:
+    nbytes = shape_bytes(op.type_str)
+    mg = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.rest)
+    if mg:
+        g = int(mg.group(2))
+    else:
+        mg = re.search(r"replica_groups=\{\{([^}]*)\}", op.rest)
+        g = len(mg.group(1).split(",")) if mg else 2
+    kind = op.kind.replace("-start", "")
+    if kind == "all-reduce":
+        return 2.0 * nbytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(nbytes) * (g - 1)
+    if kind == "collective-permute":
+        return float(nbytes)
+    return float(nbytes) * (g - 1) / g      # all-gather / all-to-all
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    link_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    loops: list = dataclasses.field(default_factory=list)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.link_bytes += other.link_bytes * mult
+        for k, v in other.coll_by_op.items():
+            self.coll_by_op[k] = self.coll_by_op.get(k, 0.0) + v * mult
+
+
+_SLICE_KINDS = {"dynamic-slice", "gather"}
+_UPDATE_KINDS = {"dynamic-update-slice", "scatter"}
+
+
+def _sliced_bytes(comp: Comp, pname: str, depth: int = 0) -> float | None:
+    """If fusion parameter ``pname`` is consumed ONLY by slice/gather (or
+    is the pass-through buffer of a dynamic-update-slice), return the
+    bytes actually touched; None -> consumed elementwise (charge full).
+
+    ``convert``/``bitcast`` consumers are transparent: XLA:CPU promotes
+    bf16 in-place updates to f32 (convert -> DUS -> convert), which on TPU
+    is a native bf16 DUS -- charging the promotion converts would bill the
+    whole stacked KV cache once per decode step (qwen3: 0.65 TB/token)."""
+    touched = 0.0
+    consumed = False
+    for op in comp.ops:
+        ops_ = None
+        if ("%" + pname) in op.rest:
+            ops_ = _operands(op.rest)
+        if not ops_ or pname not in ops_:
+            continue
+        consumed = True
+        if op.kind in _SLICE_KINDS:
+            touched += 2.0 * shape_bytes(op.type_str)
+        elif op.kind in _UPDATE_KINDS and ops_ and ops_[0] == pname:
+            upd = (shape_bytes(comp.shapes[ops_[1]])
+                   if len(ops_) > 1 and ops_[1] in comp.shapes else 0)
+            touched += 3.0 * (upd or shape_bytes(op.type_str))
+        elif op.kind in ("convert", "bitcast", "copy") and depth < 3:
+            sub = _sliced_bytes(comp, op.var, depth + 1)
+            if sub is None:
+                return None
+            touched += sub
+        else:
+            return None
+    return touched if consumed else 0.0
+
+
+def _fusion_result_bytes(op: Op, called: Comp | None) -> float:
+    """Fusion result charge; a dynamic-update-slice ROOT writes its update
+    region in place (the full stacked-KV-cache 'result' is an alias, not
+    traffic).  Handles tuple roots of several updates."""
+    if called is None or not called.ops:
+        return float(shape_bytes(op.type_str))
+    by_var = {o.var: o for o in called.ops}
+
+    def through_converts(r: Op) -> Op:
+        seen = 0
+        while r.kind in ("convert", "bitcast", "copy") and seen < 3:
+            ops_ = _operands(r.rest)
+            if not ops_ or ops_[0] not in by_var:
+                break
+            r = by_var[ops_[0]]
+            seen += 1
+        return r
+
+    root = through_converts(called.ops[-1])
+    roots = [root]
+    if root.kind == "tuple":
+        roots = [through_converts(by_var[v])
+                 for v in _operands(root.rest) if v in by_var]
+    total = 0.0
+    for r in roots:
+        if r.kind in _UPDATE_KINDS:
+            ops_ = _operands(r.rest)
+            upd = (shape_bytes(called.shapes[ops_[1]])
+                   if len(ops_) > 1 and ops_[1] in called.shapes else 0)
+            total += 3.0 * (upd or shape_bytes(r.type_str))
+        else:
+            total += shape_bytes(r.type_str)
+    return total
+
+
+def _comp_cost(name: str, comps: dict[str, Comp], memo: dict,
+               flops_only: bool = False) -> Cost:
+    key = (name, flops_only)
+    if key in memo:
+        return memo[key]
+    c = Cost()
+    memo[key] = c                     # break cycles defensively
+    comp = comps.get(name)
+    if comp is None:
+        return c
+    for op in comp.ops:
+        kind = op.kind.replace("-start", "")
+        if kind == "while":
+            callees = dict(re.findall(r"(body|condition)=%?([\w\.\-]+)",
+                                      op.rest))
+            body, cond = callees.get("body"), callees.get("condition")
+            trips = trip_count(comps[cond], comps) if cond in comps else 1
+            if body:
+                sub = _comp_cost(body, comps, memo, flops_only)
+                c.add(sub, trips)
+                c.loops.append((body, trips))
+                c.loops.extend((b, t * trips) for b, t in sub.loops)
+            continue
+        if kind == "fusion":
+            m = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+            called = comps.get(m.group(1)) if m else None
+            if called is not None:
+                # dots can live inside CPU loop fusions: flops recurse
+                c.add(_comp_cost(called.name, comps, memo, flops_only=True))
+            if flops_only:
+                continue
+            # fusion boundary traffic: result + operands, EXCEPT operands
+            # consumed only by slices/gathers inside the fusion -- those
+            # touch slice-sized bytes, not the whole (often loop-carried
+            # stacked) buffer.  Charging full size there overcounts by
+            # the trip count.
+            b = _fusion_result_bytes(op, called)
+            operands = _operands(op.rest)
+            for i, oname in enumerate(operands):
+                full = shape_bytes(comp.shapes.get(oname, ""))
+                if called is not None and i < len(called.param_order):
+                    pname = called.param_order[i]
+                    touched = _sliced_bytes(called, pname)
+                    if touched is not None:
+                        b += min(full, touched) if full else touched
+                        continue
+                b += full
+            c.bytes += b
+            continue
+        elif kind in ("call", "conditional", "async-start"):
+            for grp in _CALLEE_RE.findall(op.rest):
+                for callee in re.split(r"[ ,%]+", grp):
+                    if callee in comps:
+                        c.add(_comp_cost(callee, comps, memo, flops_only))
+            continue
+        elif kind == "dot":
+            c.flops += _dot_flops(op, comp.shapes)
+        elif kind == "convolution":
+            c.flops += 2.0 * shape_elems(op.type_str) * 4  # small convs only
+        elif kind in _COLLECTIVES:
+            lb = _coll_link_bytes(op)
+            c.link_bytes += lb
+            c.coll_by_op[kind] = c.coll_by_op.get(kind, 0.0) + lb
+        if flops_only or kind in _SKIP_BYTES:
+            continue
+        res_b = shape_bytes(op.type_str)
+        if kind in ("dynamic-slice", "gather"):
+            # traffic = the slice/rows actually touched, NOT the whole
+            # operand -- counting the full stacked-params buffer once per
+            # scan trip would overcount by the trip count (quadratic in
+            # layers for the layer scan)
+            c.bytes += 2.0 * res_b
+            continue
+        if kind in ("dynamic-update-slice", "scatter"):
+            # read-modify-write of the updated region; the pass-through
+            # buffer is aliased in place
+            upd = 0
+            ops_ = _operands(op.rest)
+            if len(ops_) >= 2 and ops_[1] in comp.shapes:
+                upd = shape_bytes(comp.shapes[ops_[1]])
+            c.bytes += 3.0 * (upd or res_b)
+            continue
+        b = res_b
+        for o in _operands(op.rest):
+            if o in comp.shapes:
+                b += shape_bytes(comp.shapes[o])
+        c.bytes += b
+    return c
+
+
+def hlo_cost(hlo_text: str) -> Cost:
+    comps, entry = parse(hlo_text)
+    if not entry:
+        # pick the computation that no one calls (fallback)
+        called = set()
+        for comp in comps.values():
+            for op in comp.ops:
+                called.update(x for grp in _CALLEE_RE.findall(op.rest)
+                              for x in re.split(r"[ ,%]+", grp))
+        roots = [n for n in comps if n not in called]
+        entry = roots[0] if roots else next(iter(comps))
+    return _comp_cost(entry, comps, {})
+
+
+def loop_breakdown(hlo_text: str) -> tuple[Cost, list[dict]]:
+    """(total cost, per-loop contributions) -- the dry-run 'profile'.
+
+    Each row is one while body with its effective trip count (nested trips
+    multiplied through); inner loops also appear inside their outer body's
+    cost, so rows overlap -- read as 'total attributable to this loop'."""
+    comps, entry = parse(hlo_text)
+    memo: dict = {}
+    total = _comp_cost(entry, comps, memo)
+    rows = []
+    for body, trips in total.loops:
+        c = _comp_cost(body, comps, memo)
+        rows.append({"body": body, "trips": trips,
+                     "flops": c.flops * trips, "bytes": c.bytes * trips,
+                     "link_bytes": c.link_bytes * trips})
+    rows.sort(key=lambda r: -r["bytes"])
+    return total, rows

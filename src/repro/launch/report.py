@@ -1,0 +1,145 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md roofline
+tables.  ``python -m repro.launch.report [--dir experiments/dryrun]``."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(d: str) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        if r.get("tag"):
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_cell(r: dict) -> dict:
+    roof = r["roofline"]
+    m = roof["memory_analysis"]
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "peak_GB": m["peak_bytes"] / 2**30,
+        "compute_s": roof["compute_s"], "memory_s": roof["memory_s"],
+        "collective_s": roof["collective_s"],
+        "bottleneck": roof["bottleneck"],
+        "model_flops": roof["model_flops"],
+        "useful": roof["useful_flops_ratio"],
+        "frac": roof["roofline_fraction"],
+    }
+
+
+def markdown(rows: list[dict], mesh: str = "single") -> str:
+    out = ["| arch | shape | peak GB/dev | compute s | memory s | "
+           "collective s | bottleneck | MODEL_FLOPS | useful ratio | "
+           "roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"SKIP (sub-quadratic gate) | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"{r['status'].upper()} | — | — | — |")
+            continue
+        c = fmt_cell(r)
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {c['peak_GB']:.2f} | "
+            f"{c['compute_s']:.4g} | {c['memory_s']:.4g} | "
+            f"{c['collective_s']:.4g} | {c['bottleneck']} | "
+            f"{c['model_flops']:.3g} | {c['useful']:.3f} | "
+            f"{c['frac']:.4f} |")
+    return "\n".join(out)
+
+
+def summary(rows: list[dict]) -> str:
+    ok = [r for r in rows if r["status"] == "ok"]
+    skip = [r for r in rows if r["status"] == "skip"]
+    bad = [r for r in rows if r["status"] not in ("ok", "skip")]
+    lines = [f"cells: {len(ok)} ok, {len(skip)} skip (long_500k x "
+             f"full-attention archs), {len(bad)} failed"]
+    for r in bad:
+        lines.append(f"  FAILED {r['arch']} {r['shape']} {r['mesh']}: "
+                     f"{str(r.get('error'))[:120]}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "experiments",
+        "dryrun"))
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--reanalyze", action="store_true")
+    args = ap.parse_args()
+    if args.reanalyze:
+        reanalyze(args.dir)
+    rows = load(args.dir)
+    print(summary(rows))
+    print()
+    print(markdown(rows, args.mesh))
+
+
+
+
+def reanalyze(d: str) -> int:
+    """Re-run the roofline analysis over saved .hlo.gz artifacts (no
+    recompilation) -- used after cost-model changes."""
+    import gzip
+
+    from repro.configs import SHAPES, get_arch
+    from repro.launch import roofline as rl
+    from repro.launch.hlo_cost import hlo_cost
+
+    n = 0
+    for f in sorted(glob.glob(os.path.join(d, "*.hlo.gz"))):
+        base = os.path.basename(f)[:-7]
+        parts = base.split("__")
+        if len(parts) < 3:
+            continue
+        arch, shape, mesh_kind = parts[0], parts[1], parts[2]
+        jf = os.path.join(d, base + ".json")
+        if not os.path.exists(jf):
+            continue
+        rec = json.load(open(jf))
+        if rec.get("status") != "ok":
+            continue
+        txt = gzip.open(f, "rt").read()
+        cfg = get_arch(arch)
+        sp = SHAPES[shape]
+        cost = hlo_cost(txt)
+        n_chips = 512 if mesh_kind == "multi" else 256
+        mf = rl.model_flops_estimate(cfg, sp.global_batch, sp.seq_len,
+                                     sp.kind)
+        roof = rec["roofline"]
+        roof["flops_per_device"] = cost.flops
+        roof["bytes_per_device"] = cost.bytes
+        roof["link_bytes_per_device"] = cost.link_bytes
+        from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16)
+        roof["compute_s"] = cost.flops / PEAK_FLOPS_BF16
+        roof["memory_s"] = cost.bytes / HBM_BW
+        roof["collective_s"] = cost.link_bytes / ICI_BW
+        terms = {"compute": roof["compute_s"], "memory": roof["memory_s"],
+                 "collective": roof["collective_s"]}
+        roof["bottleneck"] = max(terms, key=terms.get)
+        worst = max(terms.values())
+        ideal = (mf / n_chips) / PEAK_FLOPS_BF16
+        roof["roofline_fraction"] = ideal / worst if worst else 0.0
+        roof["useful_flops_ratio"] = ((mf / n_chips) / cost.flops
+                                      if cost.flops else 0.0)
+        roof["collectives"]["by_op"] = cost.coll_by_op
+        roof["collectives"]["loops"] = [list(x) for x in cost.loops]
+        json.dump(rec, open(jf, "w"), indent=1)
+        n += 1
+    print(f"re-analyzed {n} cells")
+    return n
+
+if __name__ == "__main__":
+    main()

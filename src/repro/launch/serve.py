@@ -1,0 +1,85 @@
+"""End-to-end serving driver: batched requests through the factorized
+engine.
+
+Demonstrates the paper's technique live: a workload where many requests
+share a system prompt gets its shared prefix prefilled ONCE per distinct
+prefix (compact RDF molecule), then per-request suffixes attach via the
+instanceOf pointer; the planner's #Edges-in-bytes objective declines to
+share for all-distinct workloads (Fig. 7 overhead case).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_arch, reduced
+from repro.models.blocks import Ctx
+from repro.models.lm import LM
+from repro.serving import Engine, Request
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=96)
+    ap.add_argument("--shared-frac", type=float, default=0.75,
+                    help="fraction of the prompt shared across requests")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = reduced(get_arch(args.arch)) if args.reduced \
+        else get_arch(args.arch)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    shared_len = int(args.prompt_len * args.shared_frac)
+    system_prompt = rng.integers(1, cfg.vocab_size, (shared_len,),
+                                 dtype=np.int32)
+    prompts = [np.concatenate([
+        system_prompt,
+        rng.integers(1, cfg.vocab_size,
+                     (args.prompt_len - shared_len,), dtype=np.int32)])
+        for _ in range(args.requests)]
+
+    results = {}
+    shared_plan = None
+    for share in (True, False):
+        eng = Engine(model, params, cache_len=args.prompt_len + args.max_new,
+                     chunk=32, share_prefixes=share)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, tokens=p, max_new=args.max_new))
+        t0 = time.time()
+        outs = eng.run()
+        dt = time.time() - t0
+        results[share] = outs
+        plan = eng.last_plan
+        if share:
+            shared_plan = plan
+        label = "factorized" if share else "flat      "
+        extra = ""
+        if share and plan is not None:
+            extra = (f" molecules={plan.molecule_tokens.shape[0]} "
+                     f"depth={plan.depth_chunks * plan.chunk} "
+                     f"kv_savings={plan.savings_pct:.1f}%")
+        print(f"{label}: {len(outs)} requests x {args.max_new} tokens "
+              f"in {dt:.2f}s{extra}")
+    assert results[True] == results[False], \
+        "factorized and flat serving must produce identical tokens"
+    print("factorized == flat outputs: information preserved (Def. 4.10)")
+    return {"outputs": results[True],
+            "plan_savings_pct": shared_plan.savings_pct
+            if shared_plan else 0.0}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Model zoo: every assigned architecture family as composable JAX modules.
+
+Pure-function style (no flax): parameters are pytrees of arrays described by
+``TSpec`` trees (single source of truth for shapes, dtypes and logical
+sharding axes), so the same definition serves real initialization (smoke
+tests, examples) and ShapeDtypeStruct-only dry-run lowering.
+"""
+from .common import TSpec, specs_to_shapes, init_from_specs  # noqa: F401
+from .lm import LM  # noqa: F401

@@ -1,0 +1,434 @@
+"""LM assembly: decoder-only, encoder-decoder (whisper) and VLM backbones.
+
+One class serves all ten assigned architectures, dispatching per-layer on
+``cfg.pattern`` (attn / local / ssd / rglru) and per-arch on family
+(frontend stubs, encoder stack, MoE FFNs).
+
+Homogeneous stacks (dense / moe / ssm / whisper enc+dec) are scanned over a
+layer-stacked param tree (keeps HLO compact at 126 layers and enables the
+per-block remat policy); heterogeneous stacks (recurrentgemma's 2:1
+rglru:local pattern) are unrolled.
+
+Three entry points per model -- ``forward`` (train), ``prefill`` (build the
+decode cache), ``decode_step`` (one token) -- matching the assigned shape
+kinds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .blocks import Ctx
+from .common import TSpec, init_from_specs, rms_norm, shard_hint, specs_to_shapes
+
+MAX_LEARNED_POS = 32_768     # whisper-style learned positions (decode_32k)
+
+
+def _add_layer_dim(tree, n: int):
+    return jax.tree.map(
+        lambda s: TSpec((n,) + s.shape, s.dtype, ("layers",) + s.axes,
+                        s.init),
+        tree, is_leaf=lambda x: isinstance(x, TSpec))
+
+
+def _layer_specs(cfg, kind: str) -> dict:
+    if kind in ("attn", "local"):
+        d = {"attn": blocks.attn_specs(cfg)}
+        if cfg.n_experts:
+            d["moe"] = blocks.moe_specs(cfg)
+        else:
+            d["mlp"] = blocks.mlp_specs(cfg)
+        return d
+    if kind == "ssd":
+        return {"ssd": blocks.ssd_specs(cfg)}
+    if kind == "rglru":
+        return {"rglru": blocks.rglru_specs(cfg),
+                "mlp": blocks.mlp_specs(cfg)}
+    raise ValueError(kind)
+
+
+def _layer_cache_specs(cfg, kind: str, batch: int, cache_len: int) -> dict:
+    if kind == "attn":
+        return {"attn": blocks.attn_cache_specs(cfg, batch, cache_len,
+                                                cfg.dtype)}
+    if kind == "local":
+        return {"attn": blocks.attn_cache_specs(cfg, batch, cache_len,
+                                                cfg.dtype, window=cfg.window)}
+    if kind == "ssd":
+        return {"ssd": blocks.ssd_cache_specs(cfg, batch)}
+    if kind == "rglru":
+        return {"rglru": blocks.rglru_cache_specs(cfg, batch)}
+    raise ValueError(kind)
+
+
+class LM:
+    """All assigned architectures behind one functional interface."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # -- parameters ---------------------------------------------------------
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        pd = cfg.param_dtype
+        p: dict[str, Any] = {
+            "embed": TSpec((cfg.vocab_size, cfg.d_model), pd,
+                           ("vocab", "embed")),
+            "final_ln": TSpec((cfg.d_model,), "float32", ("embed",),
+                              init="zeros"),
+        }
+        if not cfg.tied_embeddings:
+            p["lm_head"] = TSpec((cfg.d_model, cfg.vocab_size), pd,
+                                 ("embed", "vocab"))
+        if cfg.rope_theta == 0:
+            p["pos_embed"] = TSpec((MAX_LEARNED_POS, cfg.d_model), pd,
+                                   (None, "embed"))
+        if cfg.frontend == "vision_stub":
+            fd = cfg.frontend_dim or cfg.d_model
+            p["frontend_proj"] = TSpec((fd, cfg.d_model), pd,
+                                       (None, "embed"))
+        if cfg.homogeneous:
+            p["layers"] = _add_layer_dim(_layer_specs(cfg, cfg.pattern[0]),
+                                         cfg.n_layers)
+        else:
+            p["layers"] = [_layer_specs(cfg, k) for k in cfg.pattern]
+        if cfg.encoder_layers:
+            fd = cfg.frontend_dim or cfg.d_model
+            enc_layer = {"attn": blocks.attn_specs(cfg),
+                         "mlp": blocks.mlp_specs(cfg)}
+            p["encoder"] = {
+                "in_proj": TSpec((fd, cfg.d_model), pd, (None, "embed")),
+                "pos_embed": TSpec((cfg.frontend_tokens, cfg.d_model), pd,
+                                   (None, "embed")),
+                "layers": _add_layer_dim(enc_layer, cfg.encoder_layers),
+                "final_ln": TSpec((cfg.d_model,), "float32", ("embed",),
+                                  init="zeros"),
+            }
+            # decoder layers gain a cross-attention sublayer
+            xa = {"xattn": blocks.attn_specs(cfg)}
+            if cfg.homogeneous:
+                p["layers"] = {**p["layers"],
+                               **_add_layer_dim(xa, cfg.n_layers)}
+        return p
+
+    def init(self, key):
+        return init_from_specs(self.param_specs(), key)
+
+    def input_shapes(self) -> dict:
+        return specs_to_shapes(self.param_specs())
+
+    # -- caches --------------------------------------------------------------
+    def cache_specs(self, batch: int, cache_len: int) -> Any:
+        cfg = self.cfg
+        if cfg.homogeneous:
+            c = _layer_cache_specs(cfg, cfg.pattern[0], batch, cache_len)
+            c = _add_layer_dim(c, cfg.n_layers)
+        else:
+            c = [_layer_cache_specs(cfg, k, batch, cache_len)
+                 for k in cfg.pattern]
+        out = {"layers": c}
+        if cfg.encoder_layers:
+            hd = cfg.resolved_head_dim
+            enc_kv = {
+                "k": TSpec((cfg.n_layers, batch, cfg.n_kv_heads,
+                            cfg.frontend_tokens, hd), cfg.dtype,
+                           ("layers", "batch", "heads", None, "hd"),
+                           init="zeros"),
+                "v": TSpec((cfg.n_layers, batch, cfg.n_kv_heads,
+                            cfg.frontend_tokens, hd), cfg.dtype,
+                           ("layers", "batch", "heads", None, "hd"),
+                           init="zeros"),
+            }
+            out["encoder_kv"] = enc_kv
+        return out
+
+    # -- embedding / head ----------------------------------------------------
+    def _embed(self, params, tokens, positions, act_spec=None,
+               embed_spec=None):
+        cfg = self.cfg
+        table = shard_hint(params["embed"], embed_spec)
+        x = jnp.take(table, tokens, axis=0).astype(cfg.dtype)
+        # anchor the gather output immediately: a gather from a
+        # (vocab x embed)-sharded table gets an "involuntary full
+        # rematerialization" sharding from SPMD unless pinned here
+        x = shard_hint(x, act_spec)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+        if cfg.rope_theta == 0:
+            pe = jnp.take(params["pos_embed"], positions, axis=0)
+            pe = shard_hint(pe, act_spec)
+            x = x + pe.astype(cfg.dtype)
+        return x
+
+    def _head(self, params, x, gather_spec=None):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_ln"])
+        x = shard_hint(x, gather_spec)
+        if cfg.tied_embeddings:
+            w = params["embed"].astype(cfg.dtype)
+            return jnp.einsum("btd,vd->btv", x, w)
+        return jnp.einsum("btd,dv->btv", x, params["lm_head"].astype(cfg.dtype))
+
+    # -- block application ----------------------------------------------------
+    def _block(self, ctx: Ctx, kind: str, p, x, positions, *, cache=None,
+               return_cache=False, enc_kv=None, encoder_mode=False):
+        """One residual block.  Returns (x, new_cache, aux)."""
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        new_cache: dict = {}
+        if kind in ("attn", "local"):
+            window = cfg.window if kind == "local" else None
+            h = rms_norm(x, p["attn"]["ln"])
+            h = shard_hint(h, ctx.gather_spec)
+            a_cache = cache.get("attn") if cache else None
+            out, nc = blocks.attn_apply(
+                ctx, p["attn"], h, positions, causal=not encoder_mode,
+                window=window, cache=a_cache)
+            out = shard_hint(out, ctx.gather_spec)
+            if return_cache and a_cache is None:
+                # prefill: rebuild k/v for the cache (cheap vs attention)
+                q, k, v = blocks._project_qkv(cfg, p["attn"], h)
+                if cfg.rope_theta > 0:
+                    from .common import rope as _rope
+                    k = _rope(k, positions, cfg.rope_theta)
+                nc = blocks.attn_prefill_cache(
+                    cfg, k, v, positions, cache_len=ctx.cache_len,
+                    window=window, dtype=cfg.dtype)
+            if nc is not None:
+                new_cache["attn"] = nc
+            x = x + out
+            if enc_kv is not None:
+                h = rms_norm(x, p["xattn"]["ln"])
+                h = shard_hint(h, ctx.gather_spec)
+                out, _ = blocks.attn_apply(ctx, p["xattn"], h, positions,
+                                           kv_override=enc_kv)
+                x = x + shard_hint(out, ctx.gather_spec)
+            if "moe" in p:
+                h = rms_norm(x, p["moe"]["ln"])
+                h = shard_hint(h, ctx.gather_spec)
+                out, aux = blocks.moe_apply(ctx, p["moe"], h)
+                x = x + shard_hint(out, ctx.gather_spec)
+            else:
+                h = rms_norm(x, p["mlp"]["ln"])
+                h = shard_hint(h, ctx.gather_spec)
+                x = x + shard_hint(blocks.mlp_apply(ctx, p["mlp"], h),
+                                   ctx.gather_spec)
+        elif kind == "ssd":
+            h = rms_norm(x, p["ssd"]["ln"])
+            h = shard_hint(h, ctx.gather_spec)
+            out, nc = blocks.ssd_apply(ctx, p["ssd"], h,
+                                       cache=cache.get("ssd") if cache else None,
+                                       return_cache=return_cache)
+            if nc is not None:
+                new_cache["ssd"] = nc
+            x = x + shard_hint(out, ctx.gather_spec)
+        elif kind == "rglru":
+            h = rms_norm(x, p["rglru"]["ln"])
+            h = shard_hint(h, ctx.gather_spec)
+            out, nc = blocks.rglru_apply(
+                ctx, p["rglru"], h,
+                cache=cache.get("rglru") if cache else None,
+                return_cache=return_cache)
+            if nc is not None:
+                new_cache["rglru"] = nc
+            x = x + shard_hint(out, ctx.gather_spec)
+            h = rms_norm(x, p["mlp"]["ln"])
+            h = shard_hint(h, ctx.gather_spec)
+            x = x + shard_hint(blocks.mlp_apply(ctx, p["mlp"], h),
+                               ctx.gather_spec)
+        else:
+            raise ValueError(kind)
+        x = shard_hint(x, ctx.act_spec)
+        return x, new_cache, aux
+
+    # -- stacks ---------------------------------------------------------------
+    def _run_layers(self, ctx: Ctx, params, x, positions, *, caches=None,
+                    return_cache=False, enc_out=None):
+        cfg = self.cfg
+        kind0 = cfg.pattern[0]
+        aux_total = jnp.zeros((), jnp.float32)
+        if cfg.homogeneous:
+            def body(carry, layer):
+                xc, aux = carry
+                lp, lcache, lenc_kv = layer
+                if ctx.layer_param_specs is not None:
+                    lp = jax.tree.map(shard_hint, lp,
+                                      ctx.layer_param_specs)
+                ek = None
+                if lenc_kv is not None:
+                    ek = (lenc_kv["k"], lenc_kv["v"])
+                xc, nc, a = self._block(ctx, kind0, lp, xc, positions,
+                                        cache=lcache,
+                                        return_cache=return_cache,
+                                        enc_kv=ek)
+                return (xc, aux + a), nc
+
+            if cfg.remat:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+            layer_caches = caches["layers"] if caches else None
+            enc_kv = caches.get("encoder_kv") if caches else None
+            if enc_kv is None and enc_out is not None:
+                enc_kv = self._encoder_kv(params, enc_out)
+            xs = (params["layers"], layer_caches, enc_kv)
+            # scan needs every xs leaf to have the layer leading dim; for
+            # missing caches pass None via a length-L dummy
+            if layer_caches is None and enc_kv is None:
+                (x, aux_total), ys = jax.lax.scan(
+                    lambda c, lp: body(c, (lp, None, None)),
+                    (x, aux_total), params["layers"])
+            elif layer_caches is None:
+                (x, aux_total), ys = jax.lax.scan(
+                    lambda c, l: body(c, (l[0], None, l[1])),
+                    (x, aux_total), (params["layers"], enc_kv))
+            elif enc_kv is None:
+                (x, aux_total), ys = jax.lax.scan(
+                    lambda c, l: body(c, (l[0], l[1], None)),
+                    (x, aux_total), (params["layers"], layer_caches))
+            else:
+                (x, aux_total), ys = jax.lax.scan(
+                    body, (x, aux_total),
+                    (params["layers"], layer_caches, enc_kv))
+            new_caches = ys if (return_cache or caches is not None) else None
+            return x, new_caches, aux_total
+        # heterogeneous: unrolled
+        new_caches = []
+        for i, kind in enumerate(cfg.pattern):
+            lp = params["layers"][i]
+            if ctx.layer_param_specs is not None:
+                lp = jax.tree.map(shard_hint, lp,
+                                  ctx.layer_param_specs[i])
+            lcache = caches["layers"][i] if caches else None
+
+            def blk(lp_, x_, lcache_, _kind=kind):
+                return self._block(ctx, _kind, lp_, x_, positions,
+                                   cache=lcache_, return_cache=return_cache)
+
+            if cfg.remat:
+                blk = jax.checkpoint(
+                    blk, policy=jax.checkpoint_policies.nothing_saveable)
+            x, nc, a = blk(lp, x, lcache)
+            aux_total = aux_total + a
+            new_caches.append(nc)
+        out_caches = (new_caches
+                      if (return_cache or caches is not None) else None)
+        return x, out_caches, aux_total
+
+    # -- encoder (whisper) -----------------------------------------------------
+    def encode(self, ctx: Ctx, params, frontend_embeds):
+        cfg = self.cfg
+        enc = params["encoder"]
+        x = jnp.einsum("btf,fd->btd", frontend_embeds.astype(cfg.dtype),
+                       enc["in_proj"].astype(cfg.dtype))
+        x = x + enc["pos_embed"][None, :x.shape[1]].astype(cfg.dtype)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                     x.shape[:2])
+
+        def body(carry, lp):
+            xc, _ = carry
+            if ctx.enc_param_specs is not None:
+                lp = jax.tree.map(shard_hint, lp, ctx.enc_param_specs)
+            h = rms_norm(xc, lp["attn"]["ln"])
+            h = shard_hint(h, ctx.gather_spec)
+            out, _ = blocks.attn_apply(ctx, lp["attn"], h, positions,
+                                       causal=False)
+            xc = xc + shard_hint(out, ctx.gather_spec)
+            h = rms_norm(xc, lp["mlp"]["ln"])
+            h = shard_hint(h, ctx.gather_spec)
+            xc = xc + shard_hint(blocks.mlp_apply(ctx, lp["mlp"], h),
+                                 ctx.gather_spec)
+            xc = shard_hint(xc, ctx.act_spec)
+            return (xc, carry[1]), None
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                 enc["layers"])
+        return rms_norm(x, enc["final_ln"])
+
+    def _encoder_kv(self, params, enc_out):
+        """Per-decoder-layer cross K/V from encoder output (stacked)."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+
+        def kv_of_layer(lp):
+            h = rms_norm(enc_out, lp["xattn"]["ln"])
+            _, k, v = blocks._project_qkv(cfg, lp["xattn"], h)
+            return {"k": k.transpose(0, 2, 1, 3), "v": v.transpose(0, 2, 1, 3)}
+
+        return jax.vmap(kv_of_layer)(params["layers"])
+
+    # -- entry points -----------------------------------------------------------
+    def forward(self, params, tokens, *, ctx: Ctx, frontend_embeds=None,
+                positions=None):
+        """Train-mode full-sequence forward.  Returns (logits, aux_loss)."""
+        cfg = self.cfg
+        b, t = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32),
+                                         (b, t))
+        x = self._embed(params, tokens, positions, ctx.act_spec,
+                        ctx.embed_spec)
+        enc_out = None
+        if cfg.encoder_layers:
+            enc_out = self.encode(ctx, params, frontend_embeds)
+        elif cfg.frontend == "vision_stub":
+            img = jnp.einsum("bpf,fd->bpd",
+                             frontend_embeds.astype(cfg.dtype),
+                             params["frontend_proj"].astype(cfg.dtype))
+            x = jnp.concatenate([img, x], axis=1)
+            t_full = x.shape[1]
+            positions = jnp.broadcast_to(
+                jnp.arange(t_full, dtype=jnp.int32), (b, t_full))
+        x = shard_hint(x, ctx.act_spec)
+        x, _, aux = self._run_layers(ctx, params, x, positions,
+                                     enc_out=enc_out)
+        if cfg.frontend == "vision_stub":
+            x = x[:, -t:]                       # text positions only
+        logits = self._head(params, x, ctx.gather_spec)
+        return logits, aux
+
+    def prefill(self, params, tokens, *, ctx: Ctx, cache_len: int,
+                frontend_embeds=None):
+        """Prefill: forward + build the decode cache."""
+        cfg = self.cfg
+        b, t = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+        ctx = dataclasses.replace(ctx, cache_len=cache_len)
+        x = self._embed(params, tokens, positions, ctx.act_spec,
+                        ctx.embed_spec)
+        enc_out = None
+        if cfg.encoder_layers:
+            enc_out = self.encode(ctx, params, frontend_embeds)
+        elif cfg.frontend == "vision_stub":
+            img = jnp.einsum("bpf,fd->bpd",
+                             frontend_embeds.astype(cfg.dtype),
+                             params["frontend_proj"].astype(cfg.dtype))
+            x = jnp.concatenate([img, x], axis=1)
+            positions = jnp.broadcast_to(
+                jnp.arange(x.shape[1], dtype=jnp.int32), (b, x.shape[1]))
+        x = shard_hint(x, ctx.act_spec)
+        x, caches, _ = self._run_layers(ctx, params, x, positions,
+                                        return_cache=True, enc_out=enc_out)
+        logits = self._head(params, x[:, -1:], None)
+        out = {"layers": caches}
+        if enc_out is not None:
+            out["encoder_kv"] = self._encoder_kv(params, enc_out)
+        return logits, out
+
+    def decode_step(self, params, tokens, cache, positions, *, ctx: Ctx):
+        """One decode step.  tokens: (B, 1); positions: (B, 1)."""
+        x = self._embed(params, tokens, positions, ctx.act_spec,
+                        ctx.embed_spec)
+        x = shard_hint(x, ctx.act_spec)
+        x, new_caches, _ = self._run_layers(ctx, params, x, positions,
+                                            caches=cache)
+        logits = self._head(params, x, None)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_caches
+        return logits, new_cache

@@ -1,0 +1,5 @@
+"""Serving: batched engine, KV pool, and the paper's factorization applied
+to shared-prefix KV caches."""
+from .prefix_factorization import (  # noqa: F401
+    PrefixPlan, plan_prefix_sharing, prefix_edges_cost)
+from .engine import Engine, Request  # noqa: F401

@@ -1,0 +1,68 @@
+"""KV cache pool for the serving engine.
+
+Host-side slot manager over the device-resident cache tree built by
+``model.cache_specs``.  Supports:
+
+* slot allocation / free (continuous batching: a finished request's slot
+  is immediately reusable);
+* shared-prefix attach: a slot's first ``prefix_len`` positions point at a
+  molecule from ``prefix_factorization`` -- physically, the molecule's KV
+  is copied into the slot range once per molecule and broadcast to its
+  instance slots (device-side gather, no recompute), which keeps the
+  decode step's cache layout dense and static-shaped.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SlotState:
+    request_id: int | None = None
+    length: int = 0                  # tokens currently cached
+
+
+class KVPool:
+    def __init__(self, n_slots: int):
+        self.slots = [SlotState() for _ in range(n_slots)]
+
+    def alloc(self, request_id: int) -> int:
+        for i, s in enumerate(self.slots):
+            if s.request_id is None:
+                self.slots[i] = SlotState(request_id, 0)
+                return i
+        raise RuntimeError("KV pool exhausted")
+
+    def free(self, slot: int) -> None:
+        self.slots[slot] = SlotState()
+
+    def active(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s.request_id is not None]
+
+    def occupancy(self) -> float:
+        return len(self.active()) / max(len(self.slots), 1)
+
+
+def molecule_broadcast(cache_layers, molecule_cache, instance_of: np.ndarray):
+    """Copy each molecule's prefix KV into its instance slots.
+
+    cache_layers / molecule_cache: matching pytrees whose array leaves are
+    (L, B, ...) / (L, M, ...) with the batch dim second; returns the
+    updated cache tree (one device-side gather -- the 'instanceOf'
+    expansion made physical)."""
+    import jax
+
+    idx = np.asarray(instance_of)
+
+    def leaf(full, mol):
+        take = mol[:, idx]           # (L, B, ...) gathered per instance
+        # molecule KV occupies the first prefix positions of the sequence
+        # axis; layouts: (L, B, heads, S, hd) or (L, B, S)
+        if full.ndim == 5:
+            return full.at[:, :, :, :take.shape[3]].set(take)
+        return full.at[:, :, :take.shape[2]].set(take)
+
+    return jax.tree.map(leaf, cache_layers, molecule_cache)

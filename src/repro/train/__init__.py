@@ -1,0 +1,5 @@
+"""Training substrate: optimizers, train/serve step builders."""
+from .optimizer import (  # noqa: F401
+    Optimizer, adamw, adafactor, cosine_schedule, make_optimizer)
+from .train_step import make_train_step, TrainState  # noqa: F401
+from .serve_step import make_prefill_step, make_decode_step  # noqa: F401

@@ -1,0 +1,173 @@
+"""Optimizers, from scratch (no optax in the offline environment).
+
+Two production optimizers:
+
+* ``adamw``     -- decoupled weight decay Adam; first/second moments stored
+  in ``cfg.opt_state_dtype`` (f32 default, bf16 for the 405B-class archs
+  where f32 moments do not fit 16 GB/chip HBM -- see DESIGN.md §5).
+* ``adafactor`` -- factored second moment for rank >= 2 tensors (row/col
+  statistics), full second moment for vectors.  ~0.5 byte/param of state
+  for the big embeddings; the memory-bound option.
+
+State trees mirror the parameter tree leaf-for-leaf, so the FSDP/TP
+shardings derived for parameters apply verbatim to optimizer state (ZeRO-3
+by construction: whoever owns a param shard owns its moment shards).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    """A pair of pure functions (same contract as optax)."""
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Any], tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * (step + 1) / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay only on matrices (skip norms/bias vectors)."""
+    name = str(path[-1]) if path else ""
+    return "ln" not in name and "norm" not in name
+
+
+def adamw(lr: Callable | float, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: float = 1.0, state_dtype: str = "float32") -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+    sdt = jnp.dtype(state_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, sdt)  # noqa: E731
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        stepf = (step + 1).astype(jnp.float32)
+        c1 = 1.0 - b1 ** stepf
+        c2 = 1.0 - b2 ** stepf
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p, decay):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = m_new / c1
+            vhat = v_new / c2
+            step_dir = mhat / (jnp.sqrt(vhat) + eps)
+            if decay:
+                step_dir = step_dir + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr_t * step_dir
+            return p_new.astype(p.dtype), m_new.astype(sdt), v_new.astype(sdt)
+
+        flat_g = jax.tree_util.tree_flatten_with_path(grads)[0]
+        decay_flags = [_decay_mask(path) and leaf.ndim >= 2
+                       for path, leaf in flat_g]
+        leaves_g = [leaf for _, leaf in flat_g]
+        treedef = jax.tree.structure(grads)
+        leaves_m = jax.tree.leaves(state["m"])
+        leaves_v = jax.tree.leaves(state["v"])
+        leaves_p = jax.tree.leaves(params)
+        out = [upd(g, m, v, p, d) for g, m, v, p, d in
+               zip(leaves_g, leaves_m, leaves_v, leaves_p, decay_flags)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        del gnorm  # reported by train_step (state tree must be stable)
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: Callable | float, *, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Adafactor (Shazeer & Stern 2018) with factored 2nd moment."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        def state_of(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(state_of, params,
+                                  is_leaf=lambda x: hasattr(x, "ndim"))}
+
+    def update(grads, state, params, step):
+        stepf = (step + 1).astype(jnp.float32)
+        beta = 1.0 - stepf ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                r = (vr / jnp.maximum(denom, eps))[..., None]
+                u = gf * jax.lax.rsqrt(jnp.maximum(r, eps)) \
+                    * jax.lax.rsqrt(jnp.maximum(vc[..., None, :], eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            pf = p.astype(jnp.float32)
+            if weight_decay and p.ndim >= 2:
+                u = u + weight_decay * pf
+            return (pf - lr_t * u).astype(p.dtype), new_s
+
+        is_state = lambda x: isinstance(x, dict) and (  # noqa: E731
+            "v" in x or "vr" in x)
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = jax.tree.leaves(state["f"], is_leaf=is_state)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_f = jax.tree.unflatten(treedef, [o[1] for o in out])
+        return new_p, {"f": new_f}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg, *, base_lr: float = 3e-4, warmup: int = 100,
+                   total: int = 10_000) -> Optimizer:
+    """Config-driven optimizer selection (cfg.optimizer, cfg.opt_state_dtype)."""
+    sched = cosine_schedule(base_lr, warmup, total)
+    if cfg.optimizer == "adafactor":
+        return adafactor(sched)
+    return adamw(sched, state_dtype=cfg.opt_state_dtype)

@@ -1,0 +1,49 @@
+"""Serve-step builders: prefill (build cache) and decode (one token).
+
+The assigned ``decode_32k`` / ``long_500k`` cells lower ``decode_step``:
+one new token against a KV/state cache of ``seq_len``.  Sampling is greedy
+(argmax) by default with a temperature path; batched requests share one
+compiled step (continuous batching happens in ``serving/engine.py``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import specs_to_shapes
+
+
+def make_prefill_step(model, *, ctx, cache_len: int) -> Callable:
+    def prefill(params, tokens, frontend_embeds=None):
+        logits, cache = model.prefill(params, tokens, ctx=ctx,
+                                      cache_len=cache_len,
+                                      frontend_embeds=frontend_embeds)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return prefill
+
+
+def make_decode_step(model, *, ctx, temperature: float = 0.0) -> Callable:
+    def decode(params, tokens, cache, positions, rng=None):
+        """tokens, positions: (B, 1).  Returns (next (B,), new_cache)."""
+        logits, new_cache = model.decode_step(params, tokens, cache,
+                                              positions, ctx=ctx)
+        last = logits[:, -1].astype(jnp.float32)
+        if temperature > 0.0:
+            next_tok = jax.random.categorical(rng, last / temperature)
+        else:
+            next_tok = jnp.argmax(last, axis=-1)
+        return next_tok.astype(jnp.int32), new_cache
+    return decode
+
+
+def decode_input_specs(model, batch: int, cache_len: int) -> dict[str, Any]:
+    """ShapeDtypeStructs for one decode step (dry-run inputs)."""
+    cache = specs_to_shapes(model.cache_specs(batch, cache_len))
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "positions": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "cache": cache,
+    }

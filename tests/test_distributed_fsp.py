@@ -1,0 +1,73 @@
+"""Distributed FSP == host FSP (paper future-work parallelization), plus
+data-plane factorized store and pipeline properties."""
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gfsp
+from repro.core.distributed import gfsp_distributed, sweep_drop_one, pad_rows
+from repro.core.star import ami, num_edges
+from repro.data.factorized_store import FactorizedStore
+from repro.data.synthetic import SensorGraphSpec, generate
+
+
+def test_distributed_matches_host_sensor_graph():
+    store = generate(SensorGraphSpec(n_observations=800, seed=3))
+    for cname in ("ssn:Observation", "ssn:Measurement"):
+        cid = store.dict.lookup(cname)
+        host = gfsp(store, cid)
+        dist = gfsp_distributed(store, cid)
+        assert set(host.props) == set(dist.props)
+        assert host.edges == dist.edges
+        assert host.ami == dist.ami
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(6, 60), k=st.integers(3, 5), card=st.integers(2, 6),
+       seed=st.integers(0, 99))
+def test_sweep_matches_host_formula(n, k, card, seed):
+    """Device drop-one sweep == host AMI/#Edges for random matrices."""
+    rng = np.random.default_rng(seed)
+    mat = rng.integers(0, card, (n, k)).astype(np.int32)
+    padded, n_real = pad_rows(mat, 4)
+    import jax.numpy as jnp
+    valid = jnp.arange(padded.shape[0]) < n_real
+    edges, amis = sweep_drop_one(jnp.asarray(padded), valid,
+                                 jnp.int32(n), k)
+    for j in range(k):
+        sub = np.delete(mat, j, axis=1)
+        a = ami(sub)
+        assert int(amis[j]) == a, (j, mat)
+        assert int(edges[j]) == num_edges(a, n, k - 1, k)
+
+
+def test_factorized_store_roundtrip_and_savings():
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, 100, (8, 32), dtype=np.int32)
+    rows = base[rng.integers(0, 8, (500,))]
+    st_ = FactorizedStore.build(rows)
+    assert st_.savings_pct > 80
+    idx = rng.integers(0, 500, (64,))
+    np.testing.assert_array_equal(st_.batch(idx), rows[idx])
+
+
+def test_factorized_store_overhead_fallback():
+    """Unique rows: factorization would only add pointers (Fig. 7)."""
+    rng = np.random.default_rng(1)
+    rows = rng.integers(0, 1 << 30, (100, 16), dtype=np.int32)
+    st_ = FactorizedStore.build(rows)
+    assert st_.flat is not None
+    assert st_.savings_pct == 0.0
+    np.testing.assert_array_equal(st_.batch(np.arange(100)), rows)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 200), m=st.integers(1, 20), seed=st.integers(0, 9))
+def test_factorized_store_property(n, m, seed):
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, 50, (m, 8), dtype=np.int32)
+    rows = base[rng.integers(0, m, (n,))]
+    st_ = FactorizedStore.build(rows)
+    np.testing.assert_array_equal(st_.batch(np.arange(n)), rows)
+    assert st_.bytes_stored <= st_.bytes_original

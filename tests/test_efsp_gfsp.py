@@ -1,0 +1,122 @@
+"""Algorithm 1 (E.FSP) and Algorithm 2 (G.FSP): agreement, optimality,
+Theorem 4.1 behaviour, and the Figure-5 walkthrough."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import TripleStore, efsp, evaluate_subset, gfsp
+from repro.data.synthetic import (SensorGraphSpec, figure1_graph,
+                                  figure7b_graph, generate,
+                                  property_set_ids)
+
+
+def _fig1():
+    store = figure1_graph()
+    C = store.dict.lookup("C")
+    p = {k: store.dict.lookup(k) for k in ["p1", "p2", "p3", "p4"]}
+    return store, C, p
+
+
+def test_gfsp_figure5():
+    """G.FSP on Figure 1a finds SP = {p1,p2,p3} with one FSP of 4 entities."""
+    store, C, p = _fig1()
+    res = gfsp(store, C)
+    assert set(res.props) == {p["p1"], p["p2"], p["p3"]}
+    assert res.ami == 1
+    assert res.edges == 8
+    assert res.n_fsp == 1
+    members, objs = res.fsp[0]
+    assert members.shape[0] == 4
+
+
+def test_efsp_figure5():
+    store, C, p = _fig1()
+    res = efsp(store, C)
+    assert set(res.props) == {p["p1"], p["p2"], p["p3"]}
+    assert res.ami == 1
+    assert res.edges == 8
+    # BFS levels: cardinalities 4, 3, 2
+    assert res.iterations == 3
+
+
+def test_efsp_equals_bruteforce():
+    """E.FSP's gSpan-counted AMI matches direct evaluation on all subsets."""
+    store, C, p = _fig1()
+    props = sorted(p.values())
+    best = None
+    for k in range(2, 5):
+        for combo in itertools.combinations(props, k):
+            r = evaluate_subset(store, C, combo, n_total_props=4)
+            if best is None or r.edges < best.edges:
+                best = r
+    res = efsp(store, C)
+    assert res.edges == best.edges
+    assert set(res.props) == set(best.props)
+
+
+def test_gfsp_matches_efsp_on_sensor_graph():
+    """Paper Table 3: both algorithms detect the same FSP; the greedy one
+    evaluates far fewer subsets."""
+    store = generate(SensorGraphSpec(n_observations=300, seed=1,
+                                     include_result_links=False))
+    for cname in ["ssn:Observation", "ssn:Measurement"]:
+        C = store.dict.lookup(cname)
+        e = efsp(store, C)
+        g = gfsp(store, C)
+        assert e.edges == g.edges
+        assert set(e.props) == set(g.props)
+        assert g.evaluations <= e.evaluations
+
+
+def test_gfsp_finds_a5_and_a8():
+    """Paper §5.1: the detected FSPs are over A5 (Observation) and A8
+    (Measurement)."""
+    store = generate(SensorGraphSpec(n_observations=1500, n_sensors=10,
+                                     seed=3))
+    C_obs, a5 = property_set_ids(store, "A5")
+    res = gfsp(store, C_obs)
+    assert set(res.props) == set(a5)
+    C_meas, a8 = property_set_ids(store, "A8")
+    res = gfsp(store, C_meas)
+    assert set(res.props) == set(a8)
+
+
+def test_gfsp_objective_monotone():
+    """The greedy descent only ever improves the objective."""
+    store = generate(SensorGraphSpec(n_observations=400, seed=7))
+    C = store.dict.lookup("ssn:Observation")
+    res = gfsp(store, C)
+    # final objective must beat (or equal) the full set S
+    stats = store.class_stats(C)
+    full = evaluate_subset(store, C, stats.properties,
+                           n_total_props=stats.properties.shape[0])
+    assert res.edges <= full.edges
+
+
+def test_gfsp_overhead_graph_keeps_full_set():
+    """Figure 7b flavor: no subset improves -> greedy stops at S."""
+    store = figure7b_graph()
+    C = store.dict.lookup("C")
+    res = gfsp(store, C)
+    assert len(res.props) == 2            # S itself ({p1, p2})
+    assert res.ami == 9                   # every entity its own pattern
+
+
+def test_gfsp_device_sweep_equivalent():
+    """The batched TPU sweep gives the same result as the host loop."""
+    pytest.importorskip("jax")
+    store = generate(SensorGraphSpec(n_observations=300, seed=11,
+                                     include_result_links=False))
+    C = store.dict.lookup("ssn:Observation")
+    host = gfsp(store, C, device_sweep=False)
+    dev = gfsp(store, C, device_sweep=True)
+    assert host.edges == dev.edges
+    assert set(host.props) == set(dev.props)
+
+
+def test_empty_class():
+    store = TripleStore.from_triples([("a", "p", "b")])
+    res = gfsp(store, store.dict.id("nonexistent"))
+    assert res.props == ()
+    assert res.n_fsp == 0

@@ -1,0 +1,85 @@
+"""Loop-aware HLO cost model: exact flop counts through scans (fwd+bwd),
+trip-count extraction, collective ring models."""
+from __future__ import annotations
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_cost import hlo_cost
+from repro.launch.roofline import collective_stats
+
+
+def _scan_net(nonlinear: bool):
+    def f(x, ws):
+        def body(c, w):
+            h = c @ w
+            return (jnp.tanh(h) if nonlinear else h), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+    return f
+
+
+def test_forward_scan_flops_exact():
+    f = _scan_net(nonlinear=False)
+    xs = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 128, 128), jnp.float32)
+    c = hlo_cost(jax.jit(f).lower(xs, ws).compile().as_text())
+    expect = 7 * 2 * 128**3
+    assert c.flops == pytest.approx(expect, rel=0.02)
+    assert any(t == 7 for _, t in c.loops)
+
+
+def test_grad_scan_flops_exact():
+    f = _scan_net(nonlinear=True)
+    xs = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 128, 128), jnp.float32)
+    txt = jax.jit(jax.grad(f, argnums=(0, 1))).lower(xs, ws) \
+        .compile().as_text()
+    c = hlo_cost(txt)
+    expect = 3 * 5 * 2 * 128**3        # fwd + dx + dw
+    assert c.flops == pytest.approx(expect, rel=0.02)
+
+
+def test_nested_scan_multiplies():
+    def f(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y.sum()
+    xs = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 64, 64), jnp.float32)
+    c = hlo_cost(jax.jit(f).lower(xs, ws).compile().as_text())
+    assert c.flops == pytest.approx(4 * 3 * 2 * 64**3, rel=0.02)
+
+
+def test_collective_ring_models():
+    hlo = """
+HloModule m
+ENTRY %main (p: f32[64]) -> f32[64] {
+  %p = f32[64]{0} parameter(0)
+  %ar = f32[64]{0} all-reduce(%p), replica_groups=[2,8]<=[16]
+  %ag = f32[64]{0} all-gather(%ar), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %cp = f32[64]{0} collective-permute(%ag), source_target_pairs={{0,1}}
+}
+"""
+    cs = collective_stats(hlo)
+    b = 64 * 4
+    assert cs.by_op["all-reduce"] == pytest.approx(2 * b * 7 / 8)
+    assert cs.by_op["all-gather"] == pytest.approx(b * 3 / 4)
+    assert cs.by_op["collective-permute"] == pytest.approx(b)
+
+
+def test_bytes_nonzero_and_loop_scaled():
+    f = _scan_net(nonlinear=False)
+    xs = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    w5 = jax.ShapeDtypeStruct((5, 32, 32), jnp.float32)
+    w10 = jax.ShapeDtypeStruct((10, 32, 32), jnp.float32)
+    c5 = hlo_cost(jax.jit(f).lower(xs, w5).compile().as_text())
+    c10 = hlo_cost(jax.jit(f).lower(xs, w10).compile().as_text())
+    assert c10.bytes > c5.bytes > 0
+    assert c10.flops == pytest.approx(2 * c5.flops, rel=0.02)

@@ -1,0 +1,104 @@
+"""Serving: prefix factorization plan (the paper's #Edges objective in
+bytes), engine shared-vs-flat equality (losslessness), KV pool."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from repro.configs import get_arch, reduced
+from repro.models.lm import LM
+from repro.serving import Engine, Request, plan_prefix_sharing
+from repro.serving.kv_cache import KVPool
+from repro.serving.prefix_factorization import expand, prefix_edges_cost
+
+
+def test_plan_shares_common_prefix():
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, 100, (64,), dtype=np.int32)
+    toks = np.stack([np.concatenate([shared,
+                                     rng.integers(1, 100, (32,),
+                                                  dtype=np.int32)])
+                     for _ in range(16)])
+    plan = plan_prefix_sharing(toks, chunk=16, kv_bytes_per_token=1024)
+    assert plan.shares
+    assert plan.depth_chunks == 4            # exactly the 64 shared tokens
+    assert plan.molecule_tokens.shape[0] == 1
+    assert plan.savings_pct > 50
+    # losslessness: instanceOf expansion rebuilds the originals
+    np.testing.assert_array_equal(
+        expand(plan, toks[:, plan.suffix_start:]), toks)
+
+
+def test_plan_declines_unique_prompts():
+    """Fig. 7 overhead case: all-distinct prompts -> no sharing."""
+    rng = np.random.default_rng(1)
+    toks = rng.integers(1, 1000, (8, 64), dtype=np.int32)
+    plan = plan_prefix_sharing(toks, chunk=16, kv_bytes_per_token=1024)
+    assert not plan.shares
+    assert plan.cost_shared == plan.cost_unshared
+
+
+def test_plan_partial_groups():
+    """Two distinct system prompts -> two molecules."""
+    rng = np.random.default_rng(2)
+    heads = [rng.integers(1, 100, (32,), dtype=np.int32) for _ in range(2)]
+    toks = np.stack([np.concatenate([heads[i % 2],
+                                     rng.integers(1, 100, (16,),
+                                                  dtype=np.int32)])
+                     for i in range(10)])
+    plan = plan_prefix_sharing(toks, chunk=16, kv_bytes_per_token=4096)
+    assert plan.shares and plan.molecule_tokens.shape[0] == 2
+    assert set(plan.instance_of.tolist()) == {0, 1}
+
+
+@settings(max_examples=15, deadline=None)
+@given(r=st.integers(2, 10), dup=st.integers(1, 5),
+       chunk=st.sampled_from([4, 8]))
+def test_plan_cost_is_true_minimum(r, dup, chunk):
+    """Greedy depth == exhaustive argmin over depths (Theorem 4.1 analog)."""
+    rng = np.random.default_rng(r * 10 + dup)
+    base = rng.integers(1, 50, (dup, 16), dtype=np.int32)
+    toks = base[rng.integers(0, dup, (r,))].copy()
+    toks[:, 8:] = rng.integers(1, 50, (r, 8))      # distinct tails
+    plan = plan_prefix_sharing(toks, chunk=chunk, kv_bytes_per_token=512)
+    costs = [prefix_edges_cost(toks, d, chunk, 512)
+             for d in range(0, 16 // chunk + 1)]
+    assert plan.cost_shared == pytest.approx(min(costs))
+
+
+def test_engine_shared_equals_flat():
+    cfg = reduced(get_arch("llama3.2-1b"), n_layers=2)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab_size, (48,), dtype=np.int32)
+    prompts = [np.concatenate([shared,
+                               rng.integers(1, cfg.vocab_size, (16,),
+                                            dtype=np.int32)])
+               for _ in range(4)]
+    outs = {}
+    for share in (True, False):
+        eng = Engine(model, params, cache_len=96, chunk=16,
+                     share_prefixes=share)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, tokens=p, max_new=6))
+        outs[share] = eng.run()
+    assert outs[True] == outs[False]
+    assert all(len(v) == 6 for v in outs[True].values())
+
+
+def test_kv_pool():
+    pool = KVPool(3)
+    a = pool.alloc(10)
+    b = pool.alloc(11)
+    assert pool.occupancy() == pytest.approx(2 / 3)
+    pool.free(a)
+    c = pool.alloc(12)
+    assert c == a                      # slot reuse (continuous batching)
+    pool.alloc(13)
+    with pytest.raises(RuntimeError):
+        pool.alloc(14)
+    assert sorted(pool.active()) == [0, 1, 2]

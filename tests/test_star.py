@@ -1,0 +1,101 @@
+"""Defs 4.5-4.8 validated against the paper's Figure-1 worked example."""
+import numpy as np
+import pytest
+
+from repro.core import (TripleStore, ami, evaluate_subset, multiplicities,
+                        num_edges, row_groups, star_groups)
+from repro.data.synthetic import figure1_graph
+
+
+@pytest.fixture()
+def fig1():
+    store = figure1_graph()
+    d = store.dict
+    C = d.lookup("C")
+    p = {k: d.lookup(k) for k in ["p1", "p2", "p3", "p4"]}
+    return store, C, p
+
+
+def test_store_shape(fig1):
+    store, C, p = fig1
+    assert store.n_triples == 20          # paper: "nineteen more RDF triples"
+    ents = store.entities_of_class(C)
+    assert ents.shape[0] == 4
+    props = store.class_properties(C)
+    assert sorted(props.tolist()) == sorted(p.values())
+
+
+def test_multiplicity_def45(fig1):
+    """M(e1,e2,e3 | {p1,p2,p3}) = 4; M over {p4} in {2,1,1} pattern."""
+    store, C, p = fig1
+    _, objmat = store.object_matrix(C, [p["p1"], p["p2"], p["p3"]])
+    assert (multiplicities(objmat) == 4).all()
+    _, objmat4 = store.object_matrix(C, [p["p4"]])
+    m = sorted(multiplicities(objmat4).tolist())
+    assert m == [1, 1, 2, 2]              # e4 shared by two, e5/e6 unique
+
+
+def test_ami_def47(fig1):
+    """AMI({p1,p2,p3}) = 1; AMI({p4}) = 1/2+1/2+1+1 = 3."""
+    store, C, p = fig1
+    _, m123 = store.object_matrix(C, [p["p1"], p["p2"], p["p3"]])
+    assert ami(m123) == 1
+    _, m4 = store.object_matrix(C, [p["p4"]])
+    assert ami(m4) == 3
+
+
+def test_edges_formula_def48(fig1):
+    """Figure 3: #Edges(SS={p1..p4}) = 15, #Edges(SS'={p1,p2,p3}) = 8."""
+    store, C, p = fig1
+    all4 = [p["p1"], p["p2"], p["p3"], p["p4"]]
+    r = evaluate_subset(store, C, all4, n_total_props=4)
+    assert (r.ami, r.edges) == (3, 15)
+    r = evaluate_subset(store, C, [p["p1"], p["p2"], p["p3"]], n_total_props=4)
+    assert (r.ami, r.edges) == (1, 8)
+    # the formula directly
+    assert num_edges(3, 4, 4, 4) == 15
+    assert num_edges(1, 4, 3, 4) == 8
+
+
+def test_star_groups(fig1):
+    store, C, p = fig1
+    groups = star_groups(store, C, [p["p1"], p["p2"], p["p3"]])
+    assert len(groups) == 1
+    members, objs = groups[0]
+    assert members.shape[0] == 4
+    assert objs.shape[0] == 3
+
+
+def test_row_groups_basic():
+    mat = np.array([[1, 2], [1, 2], [3, 4], [1, 2], [3, 5]], np.int32)
+    inv, counts, rep = row_groups(mat)
+    assert counts.sum() == 5
+    assert sorted(counts.tolist()) == [1, 1, 3]
+    # inverse maps rows to their group
+    for i in range(5):
+        assert (mat[rep[inv[i]]] == mat[i]).all()
+
+
+def test_incomplete_molecules_excluded():
+    """Assumption (a) of §4.3: entities missing a property value are
+    excluded from the candidate set (validated, not assumed)."""
+    t = [("c1", "rdf:type", "C"), ("c1", "p1", "e1"), ("c1", "p2", "e2"),
+         ("c2", "rdf:type", "C"), ("c2", "p1", "e1")]  # c2 misses p2
+    store = TripleStore.from_triples(t)
+    C = store.dict.lookup("C")
+    p1, p2 = store.dict.lookup("p1"), store.dict.lookup("p2")
+    ents, objmat = store.object_matrix(C, [p1, p2])
+    assert ents.shape[0] == 1
+    with pytest.raises(ValueError):
+        store.object_matrix(C, [p1, p2], strict=True)
+
+
+def test_nonfunctional_property_excluded():
+    """Assumption (b): multi-valued properties disqualify the entity."""
+    t = [("c1", "rdf:type", "C"), ("c1", "p1", "e1"), ("c1", "p1", "e9"),
+         ("c2", "rdf:type", "C"), ("c2", "p1", "e1")]
+    store = TripleStore.from_triples(t)
+    C = store.dict.lookup("C")
+    p1 = store.dict.lookup("p1")
+    ents, _ = store.object_matrix(C, [p1])
+    assert ents.shape[0] == 1
