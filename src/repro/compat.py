@@ -1,0 +1,46 @@
+"""JAX version compatibility shims (one place for every 0.4/0.5 split).
+
+The installed toolchain pins jax 0.4.37; newer API names used across the
+codebase resolve here:
+
+* ``shard_map`` -- top-level ``jax.shard_map(..., check_vma=...)`` vs
+  ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
+* ``make_mesh`` -- ``axis_types=(AxisType.Auto, ...)`` vs no such kwarg
+  (0.4.x meshes are unconditionally Auto, so dropping it is exact).
+"""
+from __future__ import annotations
+
+import jax
+
+try:                                   # jax >= 0.5 explicit-sharding API
+    from jax.sharding import AxisType
+except ImportError:                    # jax 0.4.x: no axis_types concept
+    AxisType = None
+
+_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+if not _NEW_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across the API split.  ``check_vma`` (new name)
+    maps onto ``check_rep`` (old name); both gate the same replication-
+    invariance check."""
+    if _NEW_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma)
+
+
+def make_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` with Auto axis_types where supported."""
+    kwargs = {} if devices is None else {"devices": devices}
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(AxisType.Auto,) * len(axes),
+                                 **kwargs)
+        except TypeError:   # AxisType exists but make_mesh predates kwarg
+            pass
+    return jax.make_mesh(shape, axes, **kwargs)

@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from .star import ami_device, edges_formula_device
 from .triples import TripleStore
 
@@ -202,5 +204,5 @@ def ami_bucketed(objmat, valid, mesh, *, dp_axes=("data",),
     spec_m = P(dp_axes, None)
     spec_v = P(dp_axes)
     # check_vma=False: pallas_call outputs do not carry vma metadata yet
-    return jax.shard_map(body, mesh=mesh, in_specs=(spec_m, spec_v),
-                         out_specs=P(), check_vma=False)(objmat, valid)
+    return shard_map(body, mesh=mesh, in_specs=(spec_m, spec_v),
+                     out_specs=P(), check_vma=False)(objmat, valid)

@@ -1,0 +1,10 @@
+"""Distribution substrate: sharding plans, gradient compression, elastic
+re-meshing and fault monitoring.
+
+Layering: this package sits between the pure model/train code (which only
+carries ``PartitionSpec`` hints it is handed) and the launchers
+(``repro.launch.dryrun`` / ``repro.launch.train``), which own real meshes.
+All layout decisions live in :mod:`repro.dist.sharding`; everything else
+consumes its ``Plan``.
+"""
+from . import compression, elastic, fault, sharding  # noqa: F401

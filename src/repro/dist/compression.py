@@ -1,0 +1,91 @@
+"""Int8 gradient compression with error feedback.
+
+Same compact-representation trade as the source paper's factorized
+stars: spend a cheap encode/decode to move 4x fewer bytes.  Cross-pod
+gradient all-reduces ride a 16 GB/s DCN link while in-pod ICI does
+50 GB/s per direction, so the pod-boundary reduction is the one worth
+compressing.
+
+Quantization is per-row (last-axis absmax -> one f32 scale per row);
+round-to-nearest keeps the error within ``absmax / 254`` per element.
+The part rounding throws away is NOT dropped: ``compressed`` keeps an
+error-feedback residual per parameter and re-injects it the next step
+(Seide et al. 2014), which is what keeps tiny-gradient directions alive
+-- without it, any gradient under half a quantum is silently zero
+forever and the optimizer stalls on flat loss surfaces.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import Optimizer
+
+_EPS = 1e-12
+
+
+def quantize_int8(g) -> tuple[jax.Array, jax.Array]:
+    """``g`` (f32/bf16) -> (int8 codes, f32 per-row scale).
+
+    Scale is ``absmax / 127`` over the last axis (keepdims), so
+    ``dequantize_int8(*quantize_int8(g))`` is within half a quantum of
+    ``g`` elementwise.
+    """
+    gf = jnp.asarray(g, jnp.float32)
+    if gf.ndim == 0:
+        gf = gf[None]
+        absmax = jnp.abs(gf)
+    else:
+        absmax = jnp.max(jnp.abs(gf), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, _EPS) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    if jnp.ndim(g) == 0:
+        return q[0], scale[0]
+    return q, scale
+
+
+def dequantize_int8(q, scale) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, residual):
+    """One encode/decode round over a gradient tree.
+
+    Returns ``(decoded, new_residual)``: what the all-reduce would carry
+    (already decoded, since the sum of int8 shards is itself exactly
+    representable as f32) and the per-leaf rounding error to feed back.
+    """
+    def one(g, r):
+        total = jnp.asarray(g, jnp.float32) + r
+        deq = dequantize_int8(*quantize_int8(total))
+        dec = deq.astype(g.dtype)
+        # residual against what the caller actually receives: for bf16
+        # grads the f32->bf16 cast error must also feed back, or it
+        # biases every step
+        return dec, total - dec.astype(jnp.float32)
+    g_leaves, treedef = jax.tree.flatten(grads)
+    out = [one(g, r) for g, r in zip(g_leaves, jax.tree.leaves(residual))]
+    decoded = jax.tree.unflatten(treedef, [d for d, _ in out])
+    new_res = jax.tree.unflatten(treedef, [r for _, r in out])
+    return decoded, new_res
+
+
+def compressed(opt: Optimizer) -> Optimizer:
+    """Wrap an optimizer so its incoming gradients pass through int8
+    quantization with error feedback.  State: ``{"inner": <wrapped
+    state>, "ef": <residual tree, f32, param-shaped>}`` -- the residual
+    shards exactly like the parameters, so plans derived for params
+    apply verbatim.
+    """
+    def init(params):
+        return {"inner": opt.init(params),
+                "ef": jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        decoded, new_ef = compress_tree(grads, state["ef"])
+        new_params, new_inner = opt.update(decoded, state["inner"],
+                                           params, step)
+        return new_params, {"inner": new_inner, "ef": new_ef}
+
+    return Optimizer(init, update)

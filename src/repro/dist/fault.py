@@ -1,0 +1,84 @@
+"""Fault detection: heartbeat liveness, straggler flagging, retry.
+
+The coordinator calls ``Monitor.record(worker, step)`` on every
+heartbeat and ``Monitor.check()`` on its own cadence.  A worker whose
+last beat is older than ``deadline_s`` is dead (fires ``on_dead`` once,
+permanently excluded); a live worker ``straggler_factor`` or more steps
+behind the fastest is a straggler (fires ``on_straggler`` on the
+transition, re-arms when it catches back up).  Dead workers keep their
+last known step out of the straggler baseline so one corpse cannot mark
+the whole fleet slow.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+class Monitor:
+    def __init__(self, *, deadline_s: float, straggler_factor: int = 3,
+                 on_dead: Callable[[str], None] | None = None,
+                 on_straggler: Callable[[str], None] | None = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.deadline_s = deadline_s
+        self.straggler_factor = straggler_factor
+        self._on_dead = on_dead or (lambda w: None)
+        self._on_straggler = on_straggler or (lambda w: None)
+        self._clock = clock
+        self._beats: dict[str, tuple[float, int]] = {}  # worker -> (t, step)
+        self._dead: set[str] = set()
+        self._flagged: set[str] = set()
+
+    def record(self, worker: str, step: int) -> None:
+        if worker in self._dead:
+            return                      # no resurrection: restart re-joins
+        self._beats[worker] = (self._clock(), step)
+
+    def check(self) -> None:
+        now = self._clock()
+        for w, (t, _) in self._beats.items():
+            if w not in self._dead and now - t > self.deadline_s:
+                self._dead.add(w)
+                self._flagged.discard(w)
+                self._on_dead(w)
+        alive = {w: s for w, (_, s) in self._beats.items()
+                 if w not in self._dead}
+        if not alive:
+            return
+        front = max(alive.values())
+        for w, s in alive.items():
+            if front - s >= self.straggler_factor:
+                if w not in self._flagged:
+                    self._flagged.add(w)
+                    self._on_straggler(w)
+            else:
+                self._flagged.discard(w)
+
+    def healthy_workers(self) -> list[str]:
+        return sorted(w for w in self._beats if w not in self._dead)
+
+    def stragglers(self) -> list[str]:
+        return sorted(self._flagged)
+
+
+def retry(fn: Callable, *, attempts: int = 3, base_s: float = 0.5,
+          factor: float = 2.0, exceptions=(Exception,),
+          sleep: Callable[[float], None] = time.sleep) -> Callable:
+    """Wrap ``fn`` with exponential-backoff retries.  The last attempt's
+    exception propagates; ``sleep`` is injectable for tests."""
+    if attempts < 1:
+        raise ValueError("attempts must be >= 1")
+
+    def wrapped(*args, **kwargs):
+        delay = base_s
+        for attempt in range(attempts):
+            try:
+                return fn(*args, **kwargs)
+            except exceptions:
+                if attempt == attempts - 1:
+                    raise
+                sleep(delay)
+                delay *= factor
+        raise AssertionError("unreachable")
+
+    return wrapped

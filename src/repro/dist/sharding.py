@@ -1,0 +1,319 @@
+"""Sharding planner: logical tensor axes -> mesh axes, per config.
+
+The model code annotates every tensor with *logical* axes
+(``TSpec.axes``: "vocab", "embed", "ff", "heads", "experts", "rnn",
+"batch", "seq", "hd", "layers", ...).  ``make_plan`` reads the mesh and
+an ``ArchConfig`` and produces a :class:`Plan`; ``spec_for`` then maps a
+``TSpec`` to a concrete ``PartitionSpec`` under three rules:
+
+1. **TP rule** -- "vocab"/"ff"/"heads"/"experts"/"rnn" shard over the
+   ``model`` axis when ``cfg.tp``; "embed" shards over ``data`` when
+   ``cfg.fsdp`` (ZeRO-3 style); "seq" may take ``model`` when
+   ``cfg.seq_shard`` (flash-decode style sequence sharding).
+2. **Divisibility fallback** -- a dim whose size does not divide its
+   mesh axis replicates instead, and the decision is recorded in
+   ``plan.fallbacks`` so the dry-run can report it.  Sharding a
+   non-divisible dim would force GSPMD padding + resharding on every
+   touch.
+3. **One-mesh-axis-per-tensor rule** -- within one tensor each mesh
+   axis is claimed at most once, first (leftmost) logical dim wins.
+   Double-booking an axis is a GSPMD error; the left-to-right order
+   encodes the priority ladder (e.g. KV-cache "heads" > "seq" > "hd").
+
+Batch dims use the DP ladder (``batch_axes_for``): the widest rung of
+``("pod", "data", "model")`` whose total size divides the batch, giving
+up "model" first (it is the TP axis when ``cfg.tp``) and "pod" second,
+so plain "data" sharding survives the smallest batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import TSpec
+
+# logical axes that ride the TP ("model") mesh axis, in no particular
+# order -- per-tensor priority is the order of the dims in the TSpec
+_TP_AXES = ("vocab", "ff", "heads", "experts", "rnn")
+
+
+@dataclasses.dataclass
+class Plan:
+    """Resolved layout policy for one (config, mesh) pair."""
+    cfg: Any
+    mesh: Any
+    axis_sizes: dict[str, int]
+    tp: bool                      # model axis reserved for tensor parallel
+    fsdp: bool                    # params/opt-state sharded over data
+    seq_shard: bool               # activations may shard seq over model
+    dp_axes: tuple[str, ...]      # mesh axes available for batch sharding
+    ladder: tuple[tuple[str, ...], ...]   # DP rungs, widest first
+    fallbacks: list[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def model_axis(self) -> str | None:
+        return "model" if self.tp and "model" in self.axis_sizes else None
+
+    def size(self, axis: str) -> int:
+        return self.axis_sizes.get(axis, 1)
+
+    def note_fallback(self, msg: str) -> None:
+        if msg not in self.fallbacks:
+            self.fallbacks.append(msg)
+
+
+def make_plan(cfg, mesh) -> Plan:
+    """Build a plan from any mesh-like object exposing ``.devices``
+    (ndarray) and ``.axis_names`` -- real ``jax.sharding.Mesh`` or a test
+    fake; the rule logic itself is device-free."""
+    names = tuple(mesh.axis_names)
+    sizes = dict(zip(names, mesh.devices.shape))
+    tp = bool(cfg.tp) and "model" in sizes
+    dp = tuple(n for n in names if not (tp and n == "model"))
+
+    # DP ladder: sacrifice "model" first, then "pod"; "data" dies last
+    rungs = [dp]
+    remaining = list(dp)
+    for drop in ("model", "pod"):
+        if drop in remaining:
+            remaining = [a for a in remaining if a != drop]
+            rungs.append(tuple(remaining))
+    if rungs[-1]:
+        rungs.append(())
+    return Plan(cfg=cfg, mesh=mesh, axis_sizes=sizes, tp=tp,
+                fsdp=bool(cfg.fsdp), seq_shard=bool(cfg.seq_shard),
+                dp_axes=dp, ladder=tuple(rungs))
+
+
+# ---------------------------------------------------------------------------
+# batch ladder
+# ---------------------------------------------------------------------------
+
+def batch_axes_for(plan: Plan, batch: int) -> tuple[str, ...]:
+    """Widest DP rung whose device count divides ``batch``."""
+    for rung in plan.ladder:
+        n = 1
+        for a in rung:
+            n *= plan.size(a)
+        if n and batch % n == 0:
+            return rung
+    return ()
+
+
+def _batch_entry(plan: Plan, batch: int):
+    """PartitionSpec entry for a batch dim: str | tuple | None."""
+    axes = batch_axes_for(plan, batch)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+# ---------------------------------------------------------------------------
+# tensor specs
+# ---------------------------------------------------------------------------
+
+def _candidates(plan: Plan, logical: str | None) -> tuple[str, ...]:
+    if logical in _TP_AXES and plan.model_axis:
+        return (plan.model_axis,)
+    if logical == "embed" and plan.fsdp and "data" in plan.axis_sizes:
+        return ("data",)
+    if logical == "seq" and plan.seq_shard and plan.model_axis:
+        return (plan.model_axis,)
+    if logical == "hd" and plan.model_axis:   # last resort (see TSpec doc)
+        return (plan.model_axis,)
+    return ()
+
+
+def spec_for(plan: Plan, tspec: TSpec) -> P:
+    """Map one ``TSpec`` to a ``PartitionSpec`` under the plan's rules."""
+    axes = tspec.axes or (None,) * len(tspec.shape)
+    used: set[str] = set()
+    entries: list = []
+    for dim, logical in zip(tspec.shape, axes):
+        if logical == "batch":
+            entry = _batch_entry(plan, dim)
+            picked = entry if isinstance(entry, tuple) else (
+                (entry,) if entry else ())
+            if any(a in used for a in picked):
+                entry = None
+            else:
+                used.update(picked)
+            entries.append(entry)
+            continue
+        entry = None
+        for cand in _candidates(plan, logical):
+            if cand in used:
+                continue               # one-mesh-axis-per-tensor rule
+            if dim % plan.size(cand) == 0:
+                entry = cand
+                used.add(cand)
+                break
+            if logical != "hd":        # hd replicas are free, stay quiet
+                plan.note_fallback(
+                    f"{logical}: {dim} % {cand}={plan.size(cand)} != 0 "
+                    f"-> replicated")
+        entries.append(entry)
+    return P(*entries)
+
+
+def tree_shardings(plan: Plan, spec_tree):
+    """TSpec tree -> NamedSharding tree (requires a real mesh)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(plan.mesh, spec_for(plan, s)), spec_tree,
+        is_leaf=lambda x: isinstance(x, TSpec))
+
+
+# ---------------------------------------------------------------------------
+# activations / attention
+# ---------------------------------------------------------------------------
+
+def act_spec(plan: Plan, batch: int, *, seq: int | None = None,
+             decode: bool = False) -> P:
+    """(B, T, D) residual-stream spec.  Sequence takes the model axis for
+    seq-sharded TP archs on divisible lengths; decode (T=1) and uneven
+    lengths replicate T."""
+    b = _batch_entry(plan, batch)
+    t = None
+    if not decode and seq and plan.seq_shard and plan.model_axis:
+        if seq % plan.size(plan.model_axis) == 0:
+            t = plan.model_axis
+        else:
+            plan.note_fallback(
+                f"seq: {seq} % {plan.model_axis}="
+                f"{plan.size(plan.model_axis)} != 0 -> replicated")
+    return P(b, t, None)
+
+
+def qkv_specs(plan: Plan, cfg, batch: int, *, seq: int | None = None
+              ) -> tuple[P, P, P]:
+    """Specs for head-major attention tensors.
+
+    Returns ``(q, kv, grouped)`` for layouts ``(B, H, T, hd)``,
+    ``(B, Hkv, T, hd)`` and ``(B, Hkv, G, T, hd)`` (G = Hq/Hkv).
+
+    The KV head count owns the layout decision: when it divides the
+    model axis, q/kv/grouped all pin heads to ``model``.  When it does
+    not (GQA kv=8 on a 16-way axis), pinning q head-major anyway would
+    fight the grouped layout with per-chunk all-to-alls, so q/kv stay
+    replicated over heads and the grouped tensor sheds TP onto its
+    group dim, then its seq dim, then gives up.
+    """
+    b = _batch_entry(plan, batch)
+    m = plan.model_axis
+    kv_heads = cfg.n_kv_heads
+    heads = cfg.n_heads
+    if m and kv_heads and kv_heads % plan.size(m) == 0 \
+            and heads % plan.size(m) == 0:
+        return (P(b, m, None, None), P(b, m, None, None),
+                P(b, m, None, None, None))
+    if m and kv_heads:
+        bad = (f"kv={kv_heads}" if kv_heads % plan.size(m)
+               else f"q={heads}")
+        plan.note_fallback(
+            f"heads: {bad} % {m}={plan.size(m)} != 0 "
+            f"-> q/kv heads replicated")
+    q = P(b, None, None, None)
+    kv = P(b, None, None, None)
+    group = heads // kv_heads if kv_heads else 0
+    if m and group and group % plan.size(m) == 0:
+        grp = P(b, None, m, None, None)
+    elif m and seq and seq % plan.size(m) == 0:
+        grp = P(b, None, None, m, None)      # q-seq fallback
+    else:
+        grp = P(b, None, None, None, None)
+    return q, kv, grp
+
+
+# ---------------------------------------------------------------------------
+# optimizer state
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(cfg, param_specs):
+    """TSpec tree for the optimizer state, structurally identical to
+    ``make_optimizer(cfg).init(params)`` (same dict keys, same leaf
+    order, same shapes) -- the dry-run zips the two trees, so any drift
+    silently misaligns ``in_shardings``.
+
+    Moments inherit the parameter's logical axes verbatim (ZeRO-3 by
+    construction); adafactor's factored row/col statistics drop the
+    reduced dim's axis.
+    """
+    is_ts = lambda x: isinstance(x, TSpec)  # noqa: E731
+    if cfg.optimizer == "adafactor":
+        def factored(p: TSpec):
+            axes = p.axes or (None,) * len(p.shape)
+            if len(p.shape) >= 2:
+                return {"vr": TSpec(p.shape[:-1], "float32", axes[:-1],
+                                    init="zeros"),
+                        "vc": TSpec(p.shape[:-2] + p.shape[-1:], "float32",
+                                    axes[:-2] + axes[-1:], init="zeros")}
+            return {"v": TSpec(p.shape, "float32", axes, init="zeros")}
+        return {"f": jax.tree.map(factored, param_specs, is_leaf=is_ts)}
+
+    def moment(p: TSpec):
+        return TSpec(p.shape, cfg.opt_state_dtype,
+                     p.axes or (None,) * len(p.shape), init="zeros")
+    return {"m": jax.tree.map(moment, param_specs, is_leaf=is_ts),
+            "v": jax.tree.map(moment, param_specs, is_leaf=is_ts)}
+
+
+# ---------------------------------------------------------------------------
+# launcher helpers (dry-run wiring)
+# ---------------------------------------------------------------------------
+
+def _strip_layer_dim(s: TSpec) -> TSpec:
+    if s.axes and s.axes[0] == "layers":
+        return TSpec(s.shape[1:], s.dtype, s.axes[1:], s.init)
+    return s
+
+
+def layer_compute_specs(plan: Plan, layer_specs):
+    """Per-layer ``PartitionSpec`` hint tree for the scan body (the scan
+    strips the leading "layers" dim before the hints apply)."""
+    if isinstance(layer_specs, (list, tuple)):
+        return [layer_compute_specs(plan, l) for l in layer_specs]
+    return jax.tree.map(
+        lambda s: spec_for(plan, _strip_layer_dim(s)), layer_specs,
+        is_leaf=lambda x: isinstance(x, TSpec))
+
+
+def batch_sharding(plan: Plan, batch: int) -> NamedSharding:
+    """Sharding for a batch-leading tensor.  Deliberately a rank-1
+    prefix spec: the same sharding serves (B,) sampled tokens, (B, T)
+    prompts and (B, 1) decode steps (trailing dims replicate)."""
+    return NamedSharding(plan.mesh, P(_batch_entry(plan, batch)))
+
+
+def batch_tree_shardings(plan: Plan, batch_tree):
+    """Shardings for a batch dict: leading dim over the DP ladder, the
+    rest replicated (tokens/labels/mask are tiny next to activations)."""
+    def of(leaf):
+        b = _batch_entry(plan, leaf.shape[0]) if leaf.ndim else None
+        return NamedSharding(plan.mesh,
+                             P(b, *(None,) * max(leaf.ndim - 1, 0)))
+    return jax.tree.map(of, batch_tree)
+
+
+def train_state_shapes(cfg, model):
+    """ShapeDtypeStruct TrainState mirroring ``init_train_state``."""
+    from repro.models.common import specs_to_shapes
+    from repro.train.train_step import TrainState
+
+    param_specs = model.param_specs()
+    params = specs_to_shapes(param_specs)
+    opt = specs_to_shapes(opt_state_specs(cfg, param_specs))
+    return TrainState(params, opt, jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def train_state_shardings(plan: Plan, cfg, param_specs):
+    """NamedSharding TrainState matching ``train_state_shapes``."""
+    from repro.train.train_step import TrainState
+
+    return TrainState(
+        tree_shardings(plan, param_specs),
+        tree_shardings(plan, opt_state_specs(cfg, param_specs)),
+        NamedSharding(plan.mesh, P()))

@@ -9,8 +9,7 @@ Target hardware (roofline constants): TPU v5e-class chip.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh as make_mesh_compat  # noqa: F401
 
 # hardware constants used by the roofline analysis (per chip)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
@@ -21,11 +20,9 @@ ICI_BW = 50e9                   # bytes/s per link direction
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_test_mesh(shape=(1, 1), axes=("data", "model")):
     """Tiny mesh for CPU tests (1 real device)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)

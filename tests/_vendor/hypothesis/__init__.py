@@ -1,0 +1,207 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API surface
+this repo's property tests use.
+
+Loaded by ``tests/conftest.py`` ONLY when the real package is absent
+(the CI/dev ``test`` extra installs real hypothesis; air-gapped runners
+fall back here).  Semantics: deterministic example generation -- the
+first examples are the boundary values of every strategy, the rest are
+drawn from an RNG seeded by the test's qualified name, so runs are
+reproducible and min/max edge cases are always exercised.  No shrinking;
+the falsifying example is printed instead.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import zlib
+
+__version__ = "0.0-repro-vendored"
+__all__ = ["given", "settings", "strategies", "assume", "example",
+           "HealthCheck"]
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class HealthCheck:
+    """Attribute sink -- suppress lists are accepted and ignored."""
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.data_too_large, cls.filter_too_much]
+
+
+class settings:
+    """Decorator form only (``@settings(max_examples=..., deadline=...)``)."""
+    def __init__(self, max_examples: int = 100, deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._hypothesis_settings = self
+        return fn
+
+
+_DEFAULT_SETTINGS = settings(max_examples=50)
+
+
+class SearchStrategy:
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self._boundary = tuple(boundary)
+
+    def draw(self, rng: random.Random, index: int):
+        if index < len(self._boundary):
+            return self._boundary[index]
+        return self._draw(rng)
+
+    def map(self, f):
+        return SearchStrategy(lambda rng: f(self._draw(rng)),
+                              tuple(f(b) for b in self._boundary))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise UnsatisfiedAssumption("filter predicate too strict")
+        return SearchStrategy(draw, tuple(b for b in self._boundary
+                                          if pred(b)))
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (``st.*``)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.randint(min_value, max_value),
+                              (min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float,
+               **_ignored) -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.uniform(min_value, max_value),
+                              (min_value, max_value))
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.random() < 0.5, (False, True))
+
+    @staticmethod
+    def sampled_from(elements) -> SearchStrategy:
+        elements = list(elements)
+        if not elements:
+            raise ValueError("sampled_from requires a non-empty sequence")
+        return SearchStrategy(lambda rng: rng.choice(elements),
+                              tuple(elements))
+
+    @staticmethod
+    def just(value) -> SearchStrategy:
+        return SearchStrategy(lambda rng: value, (value,))
+
+    @staticmethod
+    def one_of(*strats) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: rng.choice(strats)._draw(rng),
+            tuple(b for s in strats for b in s._boundary[:1]))
+
+    @staticmethod
+    def lists(elem: SearchStrategy, *, min_size: int = 0,
+              max_size: int = 10) -> SearchStrategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elem._draw(rng) for _ in range(n)]
+        # boundary = the minimal VALID list; element strategies without
+        # boundary values contribute no boundary rather than an example
+        # that violates min_size
+        if elem._boundary:
+            boundary = ([elem._boundary[0]] * min_size,)
+        elif min_size == 0:
+            boundary = ([],)
+        else:
+            boundary = ()
+        return SearchStrategy(draw, boundary)
+
+    @staticmethod
+    def tuples(*strats) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: tuple(s._draw(rng) for s in strats))
+
+
+def example(**kwargs):
+    """Pin an explicit example; runs before generated ones."""
+    def deco(fn):
+        pinned = list(getattr(fn, "_hypothesis_examples", []))
+        pinned.append(kwargs)
+        fn._hypothesis_examples = pinned
+        return fn
+    return deco
+
+
+def given(*args, **strategies_kw):
+    if args:
+        raise TypeError("vendored hypothesis shim supports keyword "
+                        "strategies only: @given(x=st.integers(...))")
+
+    def deco(fn):
+        # outer params (fixtures / parametrize) = fn's signature minus
+        # the given-supplied names; expose them so pytest injects them
+        sig = inspect.signature(fn)
+        outer = [p for n, p in sig.parameters.items()
+                 if n not in strategies_kw]
+
+        def wrapper(*args, **outer_kw):
+            bound = dict(zip((p.name for p in outer), args))
+            bound.update(outer_kw)
+            s = (getattr(wrapper, "_hypothesis_settings", None)
+                 or getattr(fn, "_hypothesis_settings", None)
+                 or _DEFAULT_SETTINGS)
+            rng = random.Random(zlib.crc32(
+                (fn.__module__ + "." + fn.__qualname__).encode()))
+            pinned = getattr(fn, "_hypothesis_examples", [])
+            for kw in pinned:
+                _run_one(fn, {**bound, **kw})
+            for i in range(s.max_examples):
+                kw = {name: strat.draw(rng, i)
+                      for name, strat in strategies_kw.items()}
+                _run_one(fn, {**bound, **kw})
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__signature__ = sig.replace(parameters=outer)
+        # pytest plugins (anyio, hypothesis's own) introspect
+        # ``fn.hypothesis.inner_test`` -- mirror that shape
+        wrapper.hypothesis = type("HypothesisHandle", (),
+                                  {"inner_test": staticmethod(fn)})()
+        if hasattr(fn, "_hypothesis_settings"):
+            wrapper._hypothesis_settings = fn._hypothesis_settings
+        return wrapper
+
+    return deco
+
+
+def _run_one(fn, kwargs):
+    try:
+        fn(**kwargs)
+    except UnsatisfiedAssumption:
+        return
+    except Exception:
+        print(f"Falsifying example: {fn.__name__}(" +
+              ", ".join(f"{k}={v!r}" for k, v in kwargs.items()) + ")",
+              file=sys.stderr)
+        raise

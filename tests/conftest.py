@@ -1,0 +1,31 @@
+"""Test bootstrap: src/ on sys.path, markers, hypothesis fallback.
+
+Putting ``src`` on ``sys.path`` here means plain ``python -m pytest``
+works without the ``PYTHONPATH=src`` incantation (conftest loads before
+any test module imports ``repro``).  When the real ``hypothesis``
+package is missing (air-gapped runners), the vendored shim in
+``tests/_vendor`` is appended instead -- the ``test`` extra in
+pyproject.toml installs the real thing where the network allows.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _VENDOR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "_vendor")
+    if _VENDOR not in sys.path:
+        sys.path.insert(0, _VENDOR)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: takes >90s; deselect with -m 'not slow'")

@@ -17,13 +17,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys, json
 import numpy as np
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
 sys.path.insert(0, "src")
 from repro.core.distributed import ami_bucketed, pad_rows, shard_rows
 from repro.core.star import ami
+from repro.launch.mesh import make_mesh_compat
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 rng = np.random.default_rng(7)
 out = []
 for n, k, card in [(1000, 4, 13), (97, 3, 2), (4096, 2, 300)]:

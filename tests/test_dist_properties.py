@@ -1,0 +1,124 @@
+"""Property coverage for the dist substrate beyond the seed contract:
+compression round-trip error bounds on full trees, elastic mesh-shape
+invariants, and plan internal consistency."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_arch
+from repro.dist import sharding as sh
+from repro.dist.compression import (compress_tree, compressed,
+                                    dequantize_int8, quantize_int8)
+from repro.dist.elastic import choose_mesh_shape
+from repro.train import adamw
+
+
+# -- compression round-trip ---------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 5), cols=st.integers(1, 48),
+       log_scale=st.floats(-6.0, 6.0), seed=st.integers(0, 99))
+def test_int8_roundtrip_error_within_half_quantum(rows, cols, log_scale,
+                                                  seed):
+    """|deq - g| <= scale/2 per element, per row (tighter than the seed's
+    global bound): round-to-nearest can be off by at most half a step."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((rows, cols)) * 10.0 ** log_scale,
+                    jnp.float32)
+    q, scale = quantize_int8(g)
+    assert q.dtype == jnp.int8 and scale.shape == (rows, 1)
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - g))
+    bound = np.asarray(scale) / 2.0 + 1e-7 * np.asarray(scale)
+    assert (err <= bound).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 99), n=st.integers(1, 16))
+def test_compress_tree_residual_accounts_for_all_error(seed, n):
+    """decoded + residual == grads + old residual, exactly: error
+    feedback loses nothing, it only defers."""
+    rng = np.random.default_rng(seed)
+    grads = {"a": jnp.asarray(rng.standard_normal((2, n)), jnp.float32),
+             "b": {"c": jnp.asarray(rng.standard_normal(n), jnp.float32)},
+             # bf16 grads: the decode->bf16 cast error must feed back too
+             "d": jnp.asarray(rng.standard_normal(n), jnp.bfloat16)}
+    res = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    decoded, new_res = compress_tree(grads, res)
+    for g, d, r in zip(jax.tree.leaves(grads), jax.tree.leaves(decoded),
+                       jax.tree.leaves(new_res)):
+        assert d.dtype == g.dtype
+        np.testing.assert_allclose(
+            np.asarray(d, np.float32) + np.asarray(r),
+            np.asarray(g, np.float32), rtol=1e-6, atol=1e-7)
+
+
+def test_compressed_state_structure_is_stable_under_jit():
+    """jit requires update() to return the same tree structure it was
+    given -- the wrapper's {"inner", "ef"} layout must survive a step."""
+    opt = compressed(adamw(0.01, weight_decay=0.0))
+    params = {"w": jnp.ones((4, 4))}
+    state = opt.init(params)
+    step = jax.jit(opt.update)
+    g = {"w": jnp.full((4, 4), 0.1)}
+    p1, s1 = step(g, state, params, jnp.int32(0))
+    p2, s2 = step(g, s1, p1, jnp.int32(1))
+    assert jax.tree.structure(s2) == jax.tree.structure(state)
+    assert float(jnp.abs(p2["w"] - 1.0).max()) > 0
+
+
+# -- elastic mesh shapes ------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(1, 4096))
+def test_choose_mesh_shape_divides_survivors(n):
+    data, model = choose_mesh_shape(n)
+    assert data * model == n            # every surviving chip is placed
+    assert model & (model - 1) == 0     # TP degree stays a power of two
+    assert 1 <= model <= 16
+
+
+def test_choose_mesh_shape_rejects_empty():
+    with pytest.raises(ValueError):
+        choose_mesh_shape(0)
+
+
+# -- plan consistency ---------------------------------------------------------
+
+class _FakeMesh:
+    def __init__(self, shape, names):
+        self.devices = np.empty(shape)
+        self.axis_names = names
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_specs_never_double_book_a_mesh_axis(name):
+    """For every arch, every parameter tensor's spec uses each mesh axis
+    at most once (GSPMD rejects double-booking outright)."""
+    from repro.models.common import TSpec
+    from repro.models.lm import LM
+
+    cfg = get_arch(name)
+    plan = sh.make_plan(cfg, _FakeMesh((2, 16, 16),
+                                       ("pod", "data", "model")))
+    leaves = jax.tree.leaves(LM(cfg).param_specs(),
+                             is_leaf=lambda x: isinstance(x, TSpec))
+    for spec in (sh.spec_for(plan, t) for t in leaves):
+        flat = [a for entry in spec if entry is not None
+                for a in (entry if isinstance(entry, tuple) else (entry,))]
+        assert len(flat) == len(set(flat)), spec
+
+
+@settings(max_examples=40, deadline=None)
+@given(batch=st.integers(1, 4096))
+def test_batch_ladder_rungs_always_divide(batch):
+    cfg = get_arch("qwen2-0.5b")
+    plan = sh.make_plan(cfg, _FakeMesh((2, 16, 16),
+                                       ("pod", "data", "model")))
+    axes = sh.batch_axes_for(plan, batch)
+    n = int(np.prod([plan.size(a) for a in axes])) if axes else 1
+    assert batch % n == 0
