@@ -3,7 +3,7 @@ graded datasets.  Validates the paper's ordering claims: A5 minimal among
 Observation sets, A8 minimal among Measurement sets, A4 maximal."""
 from __future__ import annotations
 
-from repro.core.star import evaluate_subset
+from repro.api import get_backend
 from repro.data.synthetic import PROPERTY_SETS, property_set_ids
 
 from .common import DATASETS, dataset, report
@@ -12,12 +12,14 @@ from .common import DATASETS, dataset, report
 def run(fast: bool = False) -> list[dict]:
     rows = []
     values: dict[str, dict[str, int]] = {}
+    backend = get_backend("host")
     for ds in DATASETS:
         store = dataset(ds)
         for sid in PROPERTY_SETS:
             cid, pids = property_set_ids(store, sid)
             n_s = len(store.class_properties(cid))
-            res = evaluate_subset(store, cid, pids, n_s)
+            am = store.class_stats(cid).n_instances
+            res = backend.evaluate(store, cid, tuple(pids), n_s, am)
             values.setdefault(sid, {})[ds] = res.edges
     for sid in PROPERTY_SETS:
         rows.append({"SID": sid, **values[sid]})

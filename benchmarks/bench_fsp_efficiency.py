@@ -13,12 +13,16 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import efsp, gfsp
-from repro.core.efsp import build_subgraphs_dict
-from repro.core.distributed import gfsp_distributed
+from repro.api import Compactor
 from repro.data.synthetic import MEASUREMENT, OBSERVATION, PHENOMENA
 
 from .common import dataset, report, timeit
+
+# detector x backend cells of the unified pipeline
+E_FSP = Compactor(detector="efsp")
+G_HOST = Compactor(detector="gfsp", backend="host")
+G_DEVICE = Compactor(detector="gfsp", backend="device")
+G_SHARDED = Compactor(detector="gfsp", backend="sharded")
 
 
 def _subset(store, phenomenon: str):
@@ -48,11 +52,10 @@ def run(fast: bool = False) -> list[dict]:
         else:
             sub, cid_l = store, cid
 
-        t_e, r_e = timeit(lambda: efsp(sub, cid_l), repeat=1)
-        t_g, r_g = timeit(lambda: gfsp(sub, cid_l), repeat=1)
-        t_gd, r_gd = timeit(lambda: gfsp(sub, cid_l, device_sweep=True),
-                            repeat=1)
-        t_dist, r_dist = timeit(lambda: gfsp_distributed(sub, cid_l),
+        t_e, r_e = timeit(lambda: E_FSP.detect(sub, cid_l), repeat=1)
+        t_g, r_g = timeit(lambda: G_HOST.detect(sub, cid_l), repeat=1)
+        t_gd, r_gd = timeit(lambda: G_DEVICE.detect(sub, cid_l), repeat=1)
+        t_dist, r_dist = timeit(lambda: G_SHARDED.detect(sub, cid_l),
                                 repeat=1)
         assert set(r_e.props) == set(r_g.props) == set(r_dist.props), \
             (label, r_e.props, r_g.props, r_dist.props)
@@ -88,8 +91,8 @@ def scaling(rows: list[dict]) -> list[dict]:
     for n in (500, 1_000, 2_000, 4_000, 8_000):
         store = generate(SensorGraphSpec(n_observations=n, seed=9))
         cid = store.dict.lookup(MEASUREMENT)
-        r_e = efsp(store, cid)
-        r_g = gfsp(store, cid)
+        r_e = E_FSP.detect(store, cid)
+        r_g = G_HOST.detect(store, cid)
         assert set(r_e.props) == set(r_g.props)
         out.append({"n_observations": n,
                     "E_FSP_ms": round(r_e.exec_time_ms, 1),

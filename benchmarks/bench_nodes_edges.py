@@ -3,7 +3,7 @@ over A5, Measurement over A8), graded datasets.  Validates the paper's
 size-reduction claims (obs ~37%, meas ~60% of NN+NLE)."""
 from __future__ import annotations
 
-from repro.core import factorize
+from repro.api import CompactionPlan, Compactor
 from repro.data.synthetic import property_set_ids
 
 from .common import DATASETS, dataset, report
@@ -11,11 +11,15 @@ from .common import DATASETS, dataset, report
 
 def run(fast: bool = False) -> list[dict]:
     rows = []
+    comp = Compactor()
     for ds in DATASETS:
         for sid in ("A5", "A8"):
             store = dataset(ds)
             cid, pids = property_set_ids(store, sid)
-            res = factorize(store, cid, pids)
+            res = comp.execute(
+                store,
+                CompactionPlan.explicit([(cid, pids)])
+            ).factorizations[0]
             rows.append({
                 "dataset": ds, "SID": sid,
                 "NN_before": res.nn_before, "NLE_before": res.nle_before,

@@ -1,24 +1,92 @@
 """Benchmark driver: one module per paper table/figure + kernel micro +
-the distributed-FSP roofline cell.  ``python -m benchmarks.run [--fast]``.
+the distributed-FSP roofline cell + the detector x backend perf snapshot.
+
+    python -m benchmarks.run [--fast]        # full paper suite
+    python -m benchmarks.run --snapshot      # BENCH_fsp.json only (CI smoke)
 """
 from __future__ import annotations
 
+import json
+import os
 import subprocess
 import sys
 import time
 
+SNAPSHOT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_fsp.json")
+
+# detector x backend cells of the unified pipeline; efsp / gspan consume
+# pre-counted pattern multiplicities, so only their host cell is distinct
+SNAPSHOT_CELLS = [("gfsp", "host"), ("gfsp", "device"), ("gfsp", "sharded"),
+                  ("efsp", "host"), ("gspan", "host")]
+
+
+def snapshot(fast: bool = True) -> dict:
+    """FSP perf snapshot on the synthetic sensor graph: exec_time_ms,
+    savings %, and subset evaluations for every detector x backend cell.
+    Written to BENCH_fsp.json so the bench trajectory is tracked in CI."""
+    from repro.api import Compactor
+    from repro.data.synthetic import SensorGraphSpec, generate
+
+    n_obs = 800 if fast else 4_000
+    store = generate(SensorGraphSpec(n_observations=n_obs, seed=42))
+    cells = []
+    reference = None
+    for det, be in SNAPSHOT_CELLS:
+        comp = Compactor(detector=det, backend=be)
+        t0 = time.perf_counter()
+        rep = comp.run(store)
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        dets = rep.detections
+        cell = {
+            "detector": det, "backend": be,
+            "exec_time_ms": round(wall_ms, 2),
+            "detect_time_ms": round(sum(d.exec_time_ms
+                                        for d in dets.values()), 2),
+            "evaluations": int(sum(d.evaluations for d in dets.values())),
+            "n_classes": len(rep.plan),
+            "edges": {store.dict.term(c): d.edges for c, d in dets.items()},
+            "pct_savings_triples": round(rep.pct_savings_triples, 2),
+        }
+        cells.append(cell)
+        # every cell must compact to the identical graph
+        if reference is None:
+            reference = (cell["edges"], rep.n_triples_after)
+        assert (cell["edges"], rep.n_triples_after) == reference, \
+            (det, be, cell["edges"], reference)
+    out = {
+        "graph": {"n_observations": n_obs, "n_triples": store.n_triples,
+                  "n_nodes": store.n_nodes, "seed": 42},
+        "cells": cells,
+    }
+    with open(SNAPSHOT_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"\n== BENCH_fsp snapshot ({os.path.abspath(SNAPSHOT_PATH)}) ==")
+    for c in cells:
+        print(f"{c['detector']:6s} x {c['backend']:8s} "
+              f"{c['exec_time_ms']:9.1f} ms  "
+              f"evals={c['evaluations']:<6d} "
+              f"savings={c['pct_savings_triples']:.2f}%")
+    return out
+
 
 def main() -> None:
-    fast = "--fast" in sys.argv
+    argv = sys.argv[1:]
+    fast = "--fast" in argv
+    if "--snapshot" in argv:
+        snapshot(fast=True)
+        return
     from . import (bench_formula, bench_fsp_efficiency, bench_kernels,
                    bench_nodes_edges, bench_repeats, bench_savings)
     t0 = time.time()
     bench_fsp_efficiency.run(fast)      # Table 3
     bench_formula.run(fast)             # Table 4
-    bench_savings.run(fast)             # Table 5
+    bench_savings.run(fast)             # Table 5 + surrogate minting
     bench_repeats.run(fast)             # Figure 8
     bench_nodes_edges.run(fast)         # Figure 9
     bench_kernels.run(fast)             # kernels
+    snapshot(fast=fast)                 # detector x backend matrix
     if not fast:
         # separate process: needs 512 host devices before jax init
         r = subprocess.run([sys.executable, "-m",

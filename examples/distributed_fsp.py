@@ -2,37 +2,46 @@
 
     PYTHONPATH=src python examples/distributed_fsp.py
 
-Runs G.FSP three ways on the same graph and checks they agree:
-  host (paper-faithful) / device batched sweep / mesh-sharded sweep.
-The production-mesh lowering of the sweep (512 devices) is exercised by
-``benchmarks/bench_fsp_scale.py`` -- this example stays 1-device.
+Runs G.FSP through all three execution backends of the unified pipeline
+on the same graph and checks they agree:
+
+  host     the paper-faithful sequential numpy loop
+  device   one batched jax lowering per greedy sweep
+  sharded  the device sweep row-sharded via the repro.dist planner
+           (1 device here; benchmarks/bench_fsp_scale.py lowers the same
+           sweep on the production 512-device mesh)
+
+Detection results -- including the subset-evaluation count -- are
+backend-invariant by construction (the greedy control flow is shared;
+only ``ExecutionBackend.sweep`` differs).
 """
 import time
 
-from repro.core import gfsp
-from repro.core.distributed import gfsp_distributed
+from repro.api import Compactor
+
 from repro.data.synthetic import SensorGraphSpec, generate
 
 store = generate(SensorGraphSpec(n_observations=8000, seed=11))
 cid = store.dict.lookup("ssn:Observation")
 
-t0 = time.perf_counter()
-host = gfsp(store, cid)
-t_host = time.perf_counter() - t0
+results, wall_ms = {}, {}
+for backend in ("host", "device", "sharded"):
+    comp = Compactor(detector="gfsp", backend=backend)
+    t0 = time.perf_counter()
+    results[backend] = comp.detect(store, cid)
+    wall_ms[backend] = (time.perf_counter() - t0) * 1e3
 
-t0 = time.perf_counter()
-dev = gfsp(store, cid, device_sweep=True)
-t_dev = time.perf_counter() - t0
-
-t0 = time.perf_counter()
-dist = gfsp_distributed(store, cid)
-t_dist = time.perf_counter() - t0
-
+host = results["host"]
 names = [store.dict.term(p) for p in host.props]
-assert set(host.props) == set(dev.props) == set(dist.props)
-assert host.edges == dev.edges == dist.edges
-print(f"FSP over {names}: #Edges={host.edges}, {host.n_fsp} patterns")
-print(f"host      {t_host * 1e3:8.1f} ms")
-print(f"device    {t_dev * 1e3:8.1f} ms   (batched candidate sweep)")
-print(f"sharded   {t_dist * 1e3:8.1f} ms   (row-sharded; 1 device here)")
-print("all three agree — distributed_fsp OK")
+for res in results.values():
+    assert set(res.props) == set(host.props)
+    assert res.edges == host.edges
+    assert res.evaluations == host.evaluations
+
+print(f"FSP over {names}: #Edges={host.edges}, {host.n_fsp} patterns, "
+      f"{host.evaluations} subset evaluations (backend-invariant)")
+label = {"host": "", "device": "  (batched candidate sweep)",
+         "sharded": "  (row-sharded; 1 device here)"}
+for backend in results:
+    print(f"{backend:8s}{wall_ms[backend]:8.1f} ms{label[backend]}")
+print("all three backends agree — distributed_fsp OK")

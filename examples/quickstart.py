@@ -1,45 +1,67 @@
-"""Quickstart: the paper's full pipeline on a LinkedSensorData-style graph.
+"""Quickstart: the paper's full pipeline through the unified ``repro.api``.
 
     PYTHONPATH=src python examples/quickstart.py
 
 1. generate a synthetic SSN sensor graph (paper §5 datasets);
-2. detect frequent star patterns with G.FSP (Algorithm 2);
-3. factorize them into compact RDF molecules (Algorithm 3);
-4. verify the factorized graph is smaller AND lossless (Def. 4.10/4.11);
-5. answer the same query on both graphs via instanceOf-aware rewriting.
+2. ``Compactor.run``: rank every class by predicted #Edges savings
+   (Def. 4.8), detect frequent star patterns with G.FSP (Algorithm 2),
+   and factorize the winners into compact RDF molecules (Algorithm 3) in
+   one transaction;
+3. verify the factorized graph is smaller AND lossless (Def. 4.10/4.11);
+4. answer the same query on both graphs via instanceOf-aware rewriting;
+5. ``Compactor.update``: absorb streaming inserts incrementally -- a new
+   observation whose star pattern already exists just links to its
+   surrogate, no recomputation.
 """
 import numpy as np
 
-from repro.core import (factorize, gfsp, match_star, semantic_triples)
+from repro.api import Compactor
+from repro.core import match_star, semantic_triples
 from repro.data.synthetic import SensorGraphSpec, generate
 
 store = generate(SensorGraphSpec(n_observations=3000, seed=7))
 print(f"original graph: {store.n_triples} triples, {store.n_nodes} nodes")
 
-for cname in ("ssn:Observation", "ssn:Measurement"):
-    cid = store.dict.lookup(cname)
-    res = gfsp(store, cid)
+# -- 2. plan + detect + factorize, all classes, one call --------------------
+comp = Compactor(detector="gfsp", backend="host")
+report = comp.run(store)
+for entry in report.plan:
+    cname = store.dict.term(entry.class_id)
+    res = entry.detection
     names = [store.dict.term(p) for p in res.props]
+    fact = report.factorization_for(entry.class_id)
     print(f"\n{cname}: G.FSP found {res.n_fsp} frequent star patterns over "
-          f"{names}\n  #Edges={res.edges}  iterations={res.iterations}  "
-          f"time={res.exec_time_ms:.1f}ms")
-
-    fact = factorize(store, cid, res.props)
+          f"{names}\n  #Edges={res.edges}  predicted_savings="
+          f"{entry.predicted_savings} edges  time={res.exec_time_ms:.1f}ms")
     print(f"  factorized: NLE {fact.nle_before} -> {fact.nle_after} "
           f"({fact.pct_savings_nle:+.1f}% savings)")
 
-    # losslessness: axiom expansion of G' == semantic closure of G
-    a, b = semantic_triples(store), semantic_triples(fact.graph)
-    assert a.shape == b.shape and (a == b).all()
-    print("  lossless: axiom expansion reproduces the original graph")
+print(f"\ncompacted: {report.n_triples_before} -> {report.n_triples_after} "
+      f"triples ({report.pct_savings_triples:.1f}% smaller)")
 
-    # query both graphs: who measured value val/0?
-    if cname == "ssn:Measurement":
-        v = store.dict.lookup("val/0")
-        p = store.dict.lookup("ssn:value")
-        orig = np.sort(match_star(store, [(p, v)], rewrite=False))
-        new = np.sort(match_star(fact.graph, [(p, v)], rewrite=True))
-        assert (orig == new).all() and orig.size > 0
-        print(f"  query 'value=val/0': {orig.size} matches on both graphs")
+# -- 3. losslessness: axiom closure of G' == semantic closure of G ----------
+a, b = semantic_triples(store), semantic_triples(report.graph)
+assert a.shape == b.shape and (a == b).all()
+print("lossless: axiom expansion reproduces the original graph")
+
+# -- 4. query both graphs: who measured value val/0? ------------------------
+v = store.dict.lookup("val/0")
+p = store.dict.lookup("ssn:value")
+orig = np.sort(match_star(store, [(p, v)], rewrite=False))
+new = np.sort(match_star(report.graph, [(p, v)], rewrite=True))
+assert (orig == new).all() and orig.size > 0
+print(f"query 'value=val/0': {orig.size} matches on both graphs")
+
+# -- 5. streaming inserts: incremental re-factorization ---------------------
+up = comp.update([
+    ("obs/new", "rdf:type", "ssn:Observation"),
+    ("obs/new", "ssn:observedProperty", "phenom/Temperature"),
+    ("obs/new", "ssn:procedure", "sensor/1"),
+    ("obs/new", "ssn:generatedBy", "sensor/1"),
+    ("obs/new", "ssn:samplingTime", "time/5"),
+])
+print(f"update: absorbed {up.n_entities_absorbed} entity "
+      f"({up.n_surrogates_reused} existing star patterns reused, "
+      f"{up.n_new_surrogates} minted) in {up.exec_time_ms:.1f}ms")
 
 print("\nquickstart OK")

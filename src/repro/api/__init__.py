@@ -1,0 +1,34 @@
+"""Stable compaction API: pluggable detectors x execution backends,
+multi-class auto-planning, transactional factorization, incremental
+updates.
+
+The paper's pipeline (detect-FSP -> factorize -> verify lossless,
+Algorithms 1-3) is exposed as strategies instead of free functions with
+boolean toggles:
+
+    from repro.api import Compactor
+
+    comp = Compactor(detector="gfsp", backend="device")
+    report = comp.run(store)           # rank classes, factorize the winners
+    comp.update(new_triples)           # absorb streaming inserts
+
+Extension points (see the ``Registry`` helpers):
+
+* detectors -- ``gfsp`` (greedy, Alg. 2), ``efsp`` (exhaustive, Alg. 1),
+  ``gspan`` (mined-pattern-space baseline); ``register_detector`` adds
+  more.
+* execution backends -- ``host`` (numpy), ``device`` (batched jax /
+  Pallas), ``sharded`` (mesh-sharded via the ``repro.dist`` planner);
+  ``register_backend`` adds more.
+
+The old free functions (``core.gfsp.gfsp``, ``core.efsp.efsp``,
+``core.factorize.factorize``) remain as deprecated shims over this API.
+"""
+from .backends import (BACKENDS, DeviceBackend, ExecutionBackend,  # noqa: F401
+                       HostBackend, Registry, ShardedBackend, get_backend,
+                       register_backend)
+from .detectors import (DETECTORS, Detector, ExhaustiveDetector,  # noqa: F401
+                        GreedyDetector, GSpanBaseline, get_detector,
+                        register_detector)
+from .compactor import (ClassPlan, CompactionPlan, CompactionReport,  # noqa: F401
+                        Compactor, UpdateReport)

@@ -1,0 +1,330 @@
+"""The unified compaction pipeline: plan -> execute -> absorb updates.
+
+``Compactor`` is the stable public surface over the paper's three
+algorithms (detect-FSP -> factorize -> verify lossless):
+
+    comp = Compactor(detector="gfsp", backend="device")
+    report = comp.run(store)          # auto-plans every class, factorizes
+    report.graph                      # G' (original store untouched)
+    comp.update(new_triples)          # streaming inserts, no recomputation
+
+* **Planning** ranks every class of the store by predicted ``#Edges``
+  savings (Def. 4.8): the unfactorized class representation costs
+  ``AM_G(C) * |S|`` property edges (= ``#Edges(empty SP)``), the detected
+  subset costs ``#Edges(SP*)``; classes whose predicted savings fall
+  below ``min_predicted_savings`` are skipped -- the paper's Fig. 7
+  factorization-overhead case never executes.
+* **Execution** is transactional via ``core.factorize.factorize_classes``:
+  the input store is never mutated, and the compactor commits its
+  internal state (factorized graph + per-class surrogate signature maps)
+  only after every class factorized successfully.
+* **Incremental update** absorbs streaming inserts: new entities whose
+  object tuple matches an existing star pattern link to its surrogate
+  (one ``instanceOf`` edge); novel tuples mint new surrogates with
+  continuing ordinals; incomplete molecules stay raw until later batches
+  complete them.  Losslessness (Def. 4.10/4.11) is preserved at every
+  step -- the axiom closure of the updated G' equals the closure of
+  G + inserts (tested in tests/test_api.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core.factorize import (FactorizationResult, apply_molecule_map,
+                                  factorize_classes)
+from repro.core.gfsp import FSPResult
+from repro.core.star import row_groups
+from repro.core.triples import TripleStore
+
+from .backends import ExecutionBackend, get_backend
+from .detectors import Detector, get_detector
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassPlan:
+    """One planned (class, SP) factorization with its predicted payoff.
+
+    The predictions are filled by the auto-planner; explicit plans carry
+    ``None`` (the caller already decided, so no evaluation is spent).
+    """
+
+    class_id: int
+    props: tuple[int, ...]
+    predicted_edges: int | None = None   # #Edges(SP, C, G) -- Def. 4.8
+    baseline_edges: int | None = None    # #Edges(emptyset) = AM_G(C) * |S|
+    detection: FSPResult | None = None
+
+    @property
+    def predicted_savings(self) -> int | None:
+        if self.predicted_edges is None or self.baseline_edges is None:
+            return None
+        return self.baseline_edges - self.predicted_edges
+
+    @property
+    def pct_predicted_savings(self) -> float:
+        savings = self.predicted_savings
+        if not self.baseline_edges or savings is None:
+            return 0.0
+        return 100.0 * savings / self.baseline_edges
+
+
+@dataclasses.dataclass
+class CompactionPlan:
+    """Ranked multi-class factorization plan (highest predicted savings
+    first for auto-plans; given order for explicit plans)."""
+
+    entries: list[ClassPlan]
+    detector: str = "explicit"
+    backend: str = "host"
+
+    def __iter__(self):
+        return iter(self.entries)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __bool__(self) -> bool:
+        return bool(self.entries)
+
+    @classmethod
+    def explicit(cls, pairs: Sequence[tuple[int, Sequence[int]]]
+                 ) -> "CompactionPlan":
+        """Plan from caller-chosen (class_id, props) pairs, applied in the
+        given order (no ranking, no savings filter, no detection cost --
+        predictions stay ``None``)."""
+        entries = [ClassPlan(class_id=int(cid),
+                             props=tuple(sorted(int(p) for p in props)))
+                   for cid, props in pairs]
+        return cls(entries=entries, detector="explicit", backend="host")
+
+
+@dataclasses.dataclass
+class CompactionReport:
+    """Outcome of one transactional multi-class compaction."""
+
+    graph: TripleStore
+    plan: CompactionPlan
+    factorizations: list[FactorizationResult]
+    n_triples_before: int
+    n_triples_after: int
+    exec_time_ms: float
+
+    @property
+    def pct_savings_triples(self) -> float:
+        if self.n_triples_before == 0:
+            return 0.0
+        return 100.0 * (self.n_triples_before - self.n_triples_after) \
+            / self.n_triples_before
+
+    @property
+    def detections(self) -> dict[int, FSPResult]:
+        return {e.class_id: e.detection for e in self.plan
+                if e.detection is not None}
+
+    def factorization_for(self, class_id: int) -> FactorizationResult:
+        for f in self.factorizations:
+            if f.class_id == class_id:
+                return f
+        raise KeyError(class_id)
+
+
+@dataclasses.dataclass
+class UpdateReport:
+    """Outcome of one incremental ``Compactor.update`` batch."""
+
+    graph: TripleStore
+    n_new_triples: int
+    n_entities_absorbed: int
+    n_new_surrogates: int
+    n_surrogates_reused: int
+    exec_time_ms: float
+
+
+@dataclasses.dataclass
+class _ClassState:
+    """Per-class incremental state: SP + object-tuple -> surrogate map."""
+
+    props: tuple[int, ...]
+    sig: dict[tuple[int, ...], int]
+    next_ordinal: int
+
+
+class Compactor:
+    """Configurable detect -> plan -> factorize pipeline (Algorithms 1-3).
+
+    ``detector``/``backend`` accept registered names ("gfsp"/"efsp"/
+    "gspan", "host"/"device"/"sharded") or constructed strategy instances;
+    ``detector_opts``/``backend_opts`` are forwarded when a name is given
+    (e.g. ``backend="sharded", backend_opts={"mesh": mesh}``).
+    """
+
+    def __init__(self, detector: str | Detector = "gfsp",
+                 backend: str | ExecutionBackend = "host", *,
+                 min_predicted_savings: int = 1,
+                 surrogate_prefix: str = "repro:sg",
+                 detector_opts: dict | None = None,
+                 backend_opts: dict | None = None) -> None:
+        self.detector = get_detector(detector, **(detector_opts or {}))
+        self.backend = get_backend(backend, **(backend_opts or {}))
+        self.min_predicted_savings = min_predicted_savings
+        self.surrogate_prefix = surrogate_prefix
+        self._graph: TripleStore | None = None
+        self._state: dict[int, _ClassState] = {}
+        self._all_surrogates: set[int] = set()
+
+    # -- detection ---------------------------------------------------------
+    def detect(self, store: TripleStore, class_id: int,
+               props: Sequence[int] | None = None) -> FSPResult:
+        """Run the configured detector on one class."""
+        return self.detector.detect(store, int(class_id),
+                                    backend=self.backend, props=props)
+
+    # -- planning ----------------------------------------------------------
+    def plan(self, store: TripleStore,
+             classes: Iterable[int] | None = None) -> CompactionPlan:
+        """Rank all (or the given) classes by predicted #Edges savings."""
+        cids = ([int(c) for c in classes] if classes is not None
+                else [int(c) for c in store.classes()])
+        entries = []
+        for cid in cids:
+            stats = store.class_stats(cid)
+            n_s = int(stats.properties.shape[0])
+            am = stats.n_instances
+            if n_s < 2 or am == 0:
+                continue                      # nothing star-shaped to share
+            res = self.detect(store, cid)
+            if len(res.props) < 2:
+                continue
+            entry = ClassPlan(class_id=cid, props=tuple(sorted(res.props)),
+                              predicted_edges=res.edges,
+                              baseline_edges=am * n_s, detection=res)
+            if entry.predicted_savings >= self.min_predicted_savings:
+                entries.append(entry)
+        entries.sort(key=lambda e: -e.predicted_savings)
+        return CompactionPlan(entries=entries, detector=self.detector.name,
+                              backend=self.backend.name)
+
+    # -- execution ---------------------------------------------------------
+    def execute(self, store: TripleStore,
+                plan: CompactionPlan) -> CompactionReport:
+        """Factorize every planned class transactionally.
+
+        The input store is never mutated; compactor state (for
+        ``update``) commits only after all classes succeed.
+        """
+        t0 = time.perf_counter()
+        pairs = [(e.class_id, e.props) for e in plan]
+        graph, results = factorize_classes(
+            store, pairs, surrogate_prefix=self.surrogate_prefix)
+        state: dict[int, _ClassState] = {}
+        all_sg: set[int] = set()
+        for entry, res in zip(plan, results):
+            # star_objects rows are aligned with surrogates and ordered
+            # over sorted props -- no rescan of the factorized graph
+            sig = {tuple(row): sg
+                   for row, sg in zip(res.star_objects.tolist(),
+                                      res.surrogates.tolist())}
+            state[entry.class_id] = _ClassState(
+                props=tuple(sorted(entry.props)), sig=sig,
+                next_ordinal=len(res.surrogates))
+            all_sg |= {int(x) for x in res.surrogates}
+        self._graph, self._state, self._all_surrogates = graph, state, all_sg
+        return CompactionReport(
+            graph=graph, plan=plan, factorizations=results,
+            n_triples_before=store.n_triples, n_triples_after=graph.n_triples,
+            exec_time_ms=(time.perf_counter() - t0) * 1e3)
+
+    def run(self, store: TripleStore,
+            classes: Iterable[int] | None = None) -> CompactionReport:
+        """plan + execute in one call (the common entry point)."""
+        return self.execute(store, self.plan(store, classes))
+
+    # -- incremental path --------------------------------------------------
+    @property
+    def graph(self) -> TripleStore:
+        if self._graph is None:
+            raise RuntimeError("Compactor.run()/execute() before .graph")
+        return self._graph
+
+    def update(self, new_triples) -> UpdateReport:
+        """Absorb streaming inserts into the factorized graph.
+
+        ``new_triples``: an (n, 3) id array (shared dictionary) or an
+        iterable of (subject, property, object) term triples.  New
+        entities of factorized classes whose object tuple matches an
+        existing star pattern are linked to its surrogate; novel tuples
+        mint fresh surrogates (continuing per-class ordinals); incomplete
+        molecules and unplanned classes stay raw.  No full recomputation.
+        """
+        if self._graph is None:
+            raise RuntimeError("Compactor.run()/execute() before .update()")
+        t0 = time.perf_counter()
+        g = self._graph
+        if isinstance(new_triples, np.ndarray):
+            rows = np.asarray(new_triples, np.int32).reshape(-1, 3)
+        else:
+            trips = list(new_triples)
+            if trips:
+                flat = [t for spo in trips for t in spo]
+                rows = g.dict.ids(flat).astype(np.int32).reshape(-1, 3)
+            else:
+                rows = np.empty((0, 3), np.int32)
+        combined = TripleStore.from_ids(
+            g.dict, np.concatenate([g.spo, rows], axis=0))
+        n_absorbed = n_new_sg = n_reused = 0
+        # classes are processed sequentially against the running graph so
+        # overlapping-class entities keep the same semantics as a full
+        # factorize_classes pass; the surrogate id set is loop-invariant
+        # (ids minted below are never entities of another planned class)
+        sg_arr = np.asarray(sorted(self._all_surrogates), np.int64)
+        for cid, st in self._state.items():
+            props_arr = np.asarray(st.props, np.int32)
+            ents, objmat = combined.object_matrix(cid, props_arr)
+            if ents.size == 0:
+                continue
+            raw = ~np.isin(ents, sg_arr)      # never re-factorize surrogates
+            if not raw.any():
+                continue
+            r_ents, r_mat = ents[raw], objmat[raw]
+            inv, counts, rep = row_groups(r_mat)
+            sg_of_group = np.empty((counts.shape[0],), np.int64)
+            fresh: list[tuple[int, tuple[int, ...]]] = []
+            for gi in range(counts.shape[0]):
+                key = tuple(int(x) for x in r_mat[rep[gi]])
+                sg = st.sig.get(key)
+                if sg is None:
+                    fresh.append((gi, key))
+                else:
+                    sg_of_group[gi] = sg
+            if fresh:
+                cname = combined.dict.term(cid)
+                names = [f"{self.surrogate_prefix}/{cname}/"
+                         f"{st.next_ordinal + j}" for j in range(len(fresh))]
+                new_ids = combined.dict.ids(names)
+                st.next_ordinal += len(fresh)
+                for (gi, key), sid in zip(fresh, new_ids.tolist()):
+                    sg_of_group[gi] = sid
+                    st.sig[key] = int(sid)
+                    self._all_surrogates.add(int(sid))
+            n_new_sg += len(fresh)
+            n_reused += int(counts.shape[0]) - len(fresh)
+            n_absorbed += int(r_ents.shape[0])
+            # rewrite only the absorbed entities' own rows; the rest of
+            # the (possibly huge) factorized graph passes through
+            spo = combined.spo
+            touched = np.isin(spo[:, 0], r_ents)
+            rewritten = apply_molecule_map(
+                spo[touched], r_ents, sg_of_group[inv].astype(np.int32),
+                props_arr, cid, combined.TYPE, combined.INSTANCE_OF)
+            combined = TripleStore.from_ids(
+                combined.dict, np.concatenate([spo[~touched], rewritten]))
+        self._graph = combined
+        return UpdateReport(
+            graph=combined, n_new_triples=int(rows.shape[0]),
+            n_entities_absorbed=n_absorbed, n_new_surrogates=n_new_sg,
+            n_surrogates_reused=n_reused,
+            exec_time_ms=(time.perf_counter() - t0) * 1e3)

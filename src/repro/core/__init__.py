@@ -1,5 +1,10 @@
 """Core of the paper's contribution: frequent-star-pattern detection and
-RDF graph factorization (Karim, Vidal & Auer 2020)."""
+RDF graph factorization (Karim, Vidal & Auer 2020).
+
+The stable public surface is ``repro.api`` (``Compactor`` with pluggable
+detectors and execution backends); the ``gfsp`` / ``efsp`` / ``factorize``
+free functions re-exported here are deprecated shims kept for
+compatibility."""
 from .triples import TermDict, TripleStore, RDF_TYPE, INSTANCE_OF  # noqa: F401
 from .star import (ami, multiplicities, num_edges, evaluate_subset,  # noqa: F401
                    star_groups, row_groups, StarSweepResult)

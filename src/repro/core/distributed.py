@@ -82,63 +82,17 @@ def gfsp_distributed(store: TripleStore, class_id: int, *, mesh=None,
                      use_kernel: bool = True):
     """Algorithm 2 (G.FSP) with the mesh-sharded device sweep.
 
-    Control flow mirrors ``core.gfsp.gfsp`` exactly (same stop criteria,
-    same tie-breaking; asserted equal in tests/test_distributed_fsp.py);
-    each greedy sweep evaluates all candidates in one sharded lowering.
+    Compatibility wrapper over the unified pipeline: equivalent to
+    ``repro.api.Compactor(detector="gfsp", backend="sharded",
+    backend_opts={"mesh": mesh}).detect(store, class_id)``.  Control flow
+    (stop criteria, tie-breaking, evaluation accounting) is the shared
+    ``GreedyDetector`` loop, so host / device / sharded results are
+    identical by construction (asserted in tests/test_distributed_fsp.py).
     """
-    import time
+    from repro.api import GreedyDetector, ShardedBackend
 
-    from .gfsp import FSPResult
-    from .star import star_groups
-
-    t0 = time.perf_counter()
-    stats = store.class_stats(class_id)
-    props = [int(p) for p in stats.properties]
-    am = stats.n_instances
-    n_s = len(props)
-    ents, objmat = store.object_matrix(class_id, props)
-    dp = 1
-    if mesh is not None:
-        dp = int(np.prod([s for a, s in zip(mesh.axis_names,
-                                            mesh.devices.shape)
-                          if a != "model"]))
-    objmat, n_real = pad_rows(objmat.astype(np.int32), max(dp, 1))
-    dev = (shard_rows(objmat, mesh) if mesh is not None
-           else jnp.asarray(objmat))
-    valid = jnp.arange(dev.shape[0]) < n_real
-
-    sp_idx = list(range(n_s))
-    iterations, evaluations = 0, 1
-    f_cur, ami_cur = eval_subset_device(dev, valid, am, n_s, n_s,
-                                        use_kernel)
-    f_cur, ami_cur = int(f_cur), int(ami_cur)
-
-    def _finish():
-        chosen = tuple(props[i] for i in sp_idx)
-        fsp = star_groups(store, class_id, chosen)
-        return FSPResult(
-            class_id=class_id, props=chosen, edges=f_cur, ami=ami_cur,
-            am=am, iterations=iterations, evaluations=evaluations,
-            exec_time_ms=(time.perf_counter() - t0) * 1e3, fsp=fsp)
-
-    while True:
-        iterations += 1
-        if len(sp_idx) < 2 or ami_cur == 1:
-            return _finish()
-        if len(sp_idx) < 3:        # children would have < 2 properties
-            return _finish()
-        edges, amis = sweep_drop_one(dev, valid, am, n_s, use_kernel)
-        edges, amis = np.asarray(edges), np.asarray(amis)
-        evaluations += len(sp_idx)
-        single = np.where(amis == 1)[0]
-        j = int(single[0]) if single.size else int(np.argmin(edges))
-        if int(edges[j]) >= f_cur:
-            if single.size and int(edges[j]) < f_cur:
-                pass               # unreachable; kept for symmetry
-            return _finish()
-        f_cur, ami_cur = int(edges[j]), int(amis[j])
-        del sp_idx[j]
-        dev = jnp.delete(dev, j, axis=1)
+    backend = ShardedBackend(mesh=mesh, use_kernel=use_kernel)
+    return GreedyDetector().detect(store, class_id, backend=backend)
 
 
 def ami_bucketed(objmat, valid, mesh, *, dp_axes=("data",),

@@ -17,15 +17,13 @@ prose/definition discrepancy in the paper's walkthrough).
 """
 from __future__ import annotations
 
-import itertools
-import time
+import warnings
 from typing import Sequence
 
 import numpy as np
 
 from .gfsp import FSPResult
 from .gspan import mine, molecules_of_class
-from .star import num_edges, star_groups
 from .triples import TripleStore
 
 
@@ -58,47 +56,12 @@ def efsp(store: TripleStore, class_id: int,
          props: Sequence[int] | None = None,
          min_support: int = 1,
          subgraphs_dict=None) -> FSPResult:
-    """Run E.FSP for ``class_id``; returns the same result type as G.FSP."""
-    t0 = time.perf_counter()
-    stats = store.class_stats(class_id)
-    s_all = (np.asarray(list(props), np.int32)
-             if props is not None else stats.properties)
-    n_s = int(s_all.shape[0])
-    am = stats.n_instances
-
-    if subgraphs_dict is None:
-        subgraphs_dict, _, _ = build_subgraphs_dict(
-            store, class_id, min_support=min_support)
-
-    best_sp: tuple[int, ...] | None = None
-    best_edges = 0
-    best_ami = 0
-    iterations = 0
-    evaluations = 0
-    subset_card = n_s
-    s_list = [int(p) for p in s_all]
-    while subset_card >= 2:
-        iterations += 1
-        for combo in itertools.combinations(s_list, subset_card):
-            key = frozenset(combo)
-            subgraphs = subgraphs_dict.get(key, [])
-            evaluations += 1
-            # countEdges(subgraphs): the factorized edge count of Def. 4.8 --
-            # one star (|SP|+1 edges) per pattern + untouched properties.
-            a = len(subgraphs)
-            total_edges = num_edges(a, am, subset_card, n_s)
-            if best_sp is None or total_edges < best_edges:
-                best_edges = total_edges
-                best_sp = tuple(sorted(combo))
-                best_ami = a
-        subset_card -= 1
-
-    if best_sp is None:
-        best_sp, best_ami, best_edges = (), 0, 0
-        fsp = []
-    else:
-        fsp = star_groups(store, class_id, best_sp)
-    return FSPResult(
-        class_id=class_id, props=best_sp, edges=best_edges, ami=best_ami,
-        am=am, iterations=iterations, evaluations=evaluations,
-        exec_time_ms=(time.perf_counter() - t0) * 1e3, fsp=fsp)
+    """Deprecated shim: use ``repro.api.Compactor(detector="efsp")`` /
+    ``repro.api.ExhaustiveDetector`` (the breadth-first subset scan moved
+    there; this module keeps the gSpan pattern-space construction)."""
+    warnings.warn(
+        "repro.core.efsp() is deprecated; use repro.api.Compactor("
+        "detector='efsp').detect(...)", DeprecationWarning, stacklevel=2)
+    from repro.api import ExhaustiveDetector
+    return ExhaustiveDetector(min_support=min_support).detect(
+        store, class_id, props=props, subgraphs_dict=subgraphs_dict)

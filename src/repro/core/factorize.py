@@ -13,6 +13,7 @@ Def. 4.11 axioms (see ``axioms.py``).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
 
 import numpy as np
@@ -35,6 +36,10 @@ class FactorizationResult:
     nle_after: int
     nn_before: int
     nn_after: int
+    # object tuple of each star pattern, aligned with ``surrogates``
+    # (rows over sorted ``props``) -- lets repro.api build its incremental
+    # tuple -> surrogate maps without rescanning the factorized graph
+    star_objects: np.ndarray | None = None
 
     @property
     def pct_savings_triples(self) -> float:
@@ -84,43 +89,41 @@ def _class_nle_nodes(store: TripleStore, class_id: int) -> tuple[int, int]:
     return nle, int(nodes.shape[0])
 
 
-def factorize(store: TripleStore, class_id: int, props: Sequence[int],
-              surrogate_prefix: str = "repro:sg") -> FactorizationResult:
-    """Apply Algorithm 3 for one (class, SP) pair; returns G' and mu_N."""
-    props_arr = np.asarray(sorted(int(p) for p in props), dtype=np.int32)
-    ents, objmat = store.object_matrix(class_id, props_arr)
-    nle_before, nn_before = _class_nle_nodes(store, class_id)
+def apply_molecule_map(spo: np.ndarray, mu_keys: np.ndarray,
+                       mu_vals: np.ndarray, props_arr: np.ndarray,
+                       class_id: int, type_id: int,
+                       instance_of_id: int) -> np.ndarray:
+    """Vectorized lines 8-29 of Algorithm 3: rewrite the edge set under a
+    (sorted) entity -> surrogate map ``mu``.
 
-    # -- lines 2-7: group entities by object tuple, mint surrogates --------
-    inv, counts, rep = row_groups(objmat)
-    n_groups = int(counts.shape[0])
-    surrogate_ids = np.empty((n_groups,), dtype=np.int32)
-    cname = store.dict.term(class_id)
-    for g in range(n_groups):
-        surrogate_ids[g] = store.dict.id(
-            f"{surrogate_prefix}/{cname}/{g}")
-    mu = dict(zip(ents.tolist(), surrogate_ids[inv].tolist()))
-    mu_arr_keys = ents
-    mu_arr_vals = surrogate_ids[inv]
-
-    # -- lines 8-29: rebuild the edge set, vectorized ----------------------
-    spo = store.spo
+    The ``(s type C)`` edge of a mapped entity becomes ``(s instanceOf
+    sg)`` + ``(sg type C)``; SP edges move to the surrogate ``(sg p o)``;
+    every other edge -- including type edges naming OTHER classes -- is
+    untouched.  (The seed rewrote all type edges, which merged the type
+    sets of multi-typed entities onto their shared surrogate: an entity of
+    classes C and D grouped with a C-only entity leaked ``type D`` to the
+    latter under axiom closure.  Only the class under factorization may
+    move -- Def. 4.9's compact molecule carries ``sg type C`` alone.)
+    Shared by full factorization and the incremental
+    ``repro.api.Compactor.update`` path (which maps only the newly
+    inserted entities).
+    """
     s, p, o = spo[:, 0], spo[:, 1], spo[:, 2]
-    in_mu = np.isin(s, mu_arr_keys)
+    in_mu = np.isin(s, mu_keys)
     mu_of_s = np.zeros_like(s)
-    idx = np.searchsorted(mu_arr_keys, s[in_mu])
-    mu_of_s[in_mu] = mu_arr_vals[idx]
+    idx = np.searchsorted(mu_keys, s[in_mu])
+    mu_of_s[in_mu] = mu_vals[idx]
 
-    is_type = p == store.TYPE
+    is_ctype = (p == type_id) & (o == class_id)
     in_sp = np.isin(p, props_arr)
 
-    keep_mask = ~in_mu | (~is_type & ~in_sp)      # lines 19-27: untouched
+    keep_mask = ~in_mu | (~is_ctype & ~in_sp)     # lines 19-27: untouched
     kept = spo[keep_mask]
 
-    # lines 11-14: type edges -> (s instanceOf sg) + (sg type o)
-    tm = in_mu & is_type
+    # lines 11-14: (s type C) -> (s instanceOf sg) + (sg type C)
+    tm = in_mu & is_ctype
     inst_edges = np.stack([s[tm],
-                           np.full(tm.sum(), store.INSTANCE_OF, np.int32),
+                           np.full(tm.sum(), instance_of_id, np.int32),
                            mu_of_s[tm]], axis=1)
     sg_type_edges = np.stack([mu_of_s[tm], p[tm], o[tm]], axis=1)
 
@@ -128,8 +131,37 @@ def factorize(store: TripleStore, class_id: int, props: Sequence[int],
     sm = in_mu & in_sp
     sg_prop_edges = np.stack([mu_of_s[sm], p[sm], o[sm]], axis=1)
 
-    new_spo = np.concatenate(
+    return np.concatenate(
         [kept, inst_edges, sg_type_edges, sg_prop_edges], axis=0)
+
+
+def _factorize(store: TripleStore, class_id: int, props: Sequence[int],
+               surrogate_prefix: str = "repro:sg",
+               surrogate_start: int = 0) -> FactorizationResult:
+    """Algorithm 3 for one (class, SP) pair; returns G' and mu_N.
+
+    ``surrogate_start`` offsets the surrogate ordinals so incremental
+    re-factorization (``repro.api.Compactor.update``) can mint fresh
+    names that never collide with an earlier pass.
+    """
+    props_arr = np.asarray(sorted(int(p) for p in props), dtype=np.int32)
+    ents, objmat = store.object_matrix(class_id, props_arr)
+    nle_before, nn_before = _class_nle_nodes(store, class_id)
+
+    # -- lines 2-7: group entities by object tuple, mint surrogates --------
+    # (one bulk TermDict.ids() allocation, not a per-group id() loop)
+    inv, counts, rep = row_groups(objmat)
+    n_groups = int(counts.shape[0])
+    cname = store.dict.term(class_id)
+    surrogate_ids = store.dict.ids(
+        [f"{surrogate_prefix}/{cname}/{surrogate_start + g}"
+         for g in range(n_groups)]).astype(np.int32)
+    mu = dict(zip(ents.tolist(), surrogate_ids[inv].tolist()))
+
+    # -- lines 8-29: rebuild the edge set, vectorized ----------------------
+    new_spo = apply_molecule_map(store.spo, ents, surrogate_ids[inv],
+                                 props_arr, class_id, store.TYPE,
+                                 store.INSTANCE_OF)
     gprime = TripleStore.from_ids(store.dict, new_spo)  # dedups (set union)
 
     nle_after, nn_after = _class_nle_nodes(gprime, class_id)
@@ -138,18 +170,37 @@ def factorize(store: TripleStore, class_id: int, props: Sequence[int],
         class_id=class_id, props=tuple(int(x) for x in props_arr),
         n_triples_before=store.n_triples, n_triples_after=gprime.n_triples,
         nle_before=nle_before, nle_after=nle_after,
-        nn_before=nn_before, nn_after=nn_after)
+        nn_before=nn_before, nn_after=nn_after,
+        star_objects=objmat[rep] if n_groups else
+        np.empty((0, props_arr.size), np.int32))
+
+
+def factorize(store: TripleStore, class_id: int, props: Sequence[int],
+              surrogate_prefix: str = "repro:sg") -> FactorizationResult:
+    """Deprecated shim: use ``repro.api.Compactor`` (explicit plans go
+    through ``CompactionPlan.explicit`` + ``Compactor.execute``)."""
+    warnings.warn(
+        "repro.core.factorize() is deprecated; use repro.api.Compactor "
+        "(CompactionPlan.explicit for caller-chosen property sets)",
+        DeprecationWarning, stacklevel=2)
+    return _factorize(store, class_id, props,
+                      surrogate_prefix=surrogate_prefix)
 
 
 def factorize_classes(store: TripleStore,
-                      plans: Sequence[tuple[int, Sequence[int]]]
+                      plans: Sequence[tuple[int, Sequence[int]]],
+                      surrogate_prefix: str = "repro:sg"
                       ) -> tuple[TripleStore, list[FactorizationResult]]:
     """Factorize several (class, SP) plans sequentially (paper §5 factorizes
-    Observation and Measurement independently)."""
+    Observation and Measurement independently).  This is the transactional
+    execution primitive of ``repro.api.Compactor``: the input store is
+    never mutated, so a failure at any step leaves the caller's graph
+    untouched."""
     g = store
     results = []
     for class_id, props in plans:
-        res = factorize(g, class_id, props)
+        res = _factorize(g, class_id, props,
+                         surrogate_prefix=surrogate_prefix)
         results.append(res)
         g = res.graph
     return g, results

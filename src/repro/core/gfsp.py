@@ -1,38 +1,33 @@
-"""G.FSP -- Algorithm 2: greedy frequent-star-pattern detection.
+"""G.FSP result type and the deprecated free-function entry point.
 
-Starting from ``SP = S`` (all properties of class C), each sweep evaluates
-every one-property-removed subset ``SP' = SP - {p}`` and keeps the subset
-with the lowest ``#Edges(SP', C, G)``.  The descent stops when
+The greedy descent itself (Algorithm 2) lives in
+``repro.api.detectors.GreedyDetector``; candidate-subset execution is a
+pluggable ``repro.api.backends.ExecutionBackend`` ("host" numpy loop /
+"device" batched jax sweep / "sharded" mesh sweep), which replaced the
+``device_sweep=`` boolean this module used to carry.
 
-  * no subset improves on the current ``#Edges(SP, C, G)``  (Theorem 4.1
-    guarantees no deeper subset can improve either), or
-  * ``AMI_G(SP|C) == 1``  (a single star pattern -- cannot get more frequent), or
-  * ``|SP| < 2``          (star patterns need >= 2 properties).
-
-The published pseudocode initializes the per-sweep best value ``fValue'`` to
-0 and tests ``value < fValue'``, which as written never admits a candidate;
-we implement the evidently intended semantics (per-sweep best = min over
-candidates, accept iff it strictly improves).  Ties are broken by first
-candidate encountered -- assumption (c) of §4.3.
-
-Worst case: ``sum_{i=0..n} (n - i) = n(n+1)/2`` subset evaluations (paper
-§4.3), each a single group-by -- vs E.FSP's 2^n.
+Evaluation accounting note (fixed with the API move): the seed's host
+loop charged one evaluation per actually-evaluated child and broke early
+on an AMI == 1 candidate, while the device sweep always charged
+``len(SP)`` -- so ``FSPResult.evaluations`` disagreed between backends.
+Backends now charge identically: ``len(SP)`` per executed sweep, 0 when
+children would be sub-star (``|SP'| < 2``), making the counter
+backend-invariant (asserted in tests/test_api.py).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Sequence
 
 import numpy as np
 
-from .star import StarSweepResult, evaluate_subset, star_groups
 from .triples import TripleStore
 
 
 @dataclasses.dataclass
 class FSPResult:
-    """Outcome of an FSP detection run (either algorithm)."""
+    """Outcome of an FSP detection run (any detector)."""
 
     class_id: int
     props: tuple[int, ...]          # best SP
@@ -52,82 +47,16 @@ class FSPResult:
 def gfsp(store: TripleStore, class_id: int,
          props: Sequence[int] | None = None,
          device_sweep: bool = False) -> FSPResult:
-    """Run G.FSP for ``class_id``.
+    """Deprecated shim: use ``repro.api.Compactor(detector="gfsp",
+    backend=...)`` / ``repro.api.GreedyDetector``.
 
-    ``props``: optional explicit S (defaults to all class properties).
-    ``device_sweep``: evaluate each sweep's candidate subsets as one batched
-    jax computation (TPU path) instead of the paper's sequential host loop.
+    ``device_sweep=True`` maps to the "device" execution backend.
     """
-    t0 = time.perf_counter()
-    stats = store.class_stats(class_id)
-    s_all = (np.asarray(list(props), np.int32)
-             if props is not None else stats.properties)
-    n_s = int(s_all.shape[0])
-    am = stats.n_instances
-
-    sp = tuple(int(p) for p in s_all)
-    iterations = 0
-    evaluations = 0
-
-    def _finish(best: StarSweepResult) -> FSPResult:
-        fsp = star_groups(store, class_id, best.props)
-        return FSPResult(
-            class_id=class_id, props=best.props, edges=best.edges,
-            ami=best.ami, am=am, iterations=iterations,
-            evaluations=evaluations,
-            exec_time_ms=(time.perf_counter() - t0) * 1e3, fsp=fsp)
-
-    if n_s == 0 or am == 0:
-        empty = StarSweepResult(props=(), ami=0, am=am,
-                                n_total_props=n_s, edges=0)
-        return _finish(empty)
-
-    current = evaluate_subset(store, class_id, sp, n_s, am)
-    evaluations += 1
-    while True:
-        iterations += 1
-        if len(current.props) < 2 or current.is_single_pattern:
-            return _finish(current)
-        best_child: StarSweepResult | None = None
-        if device_sweep and len(current.props) >= 3:
-            best_child = _device_sweep(store, class_id, current, n_s, am)
-            evaluations += len(current.props)
-        else:
-            for p in current.props:
-                child_props = tuple(q for q in current.props if q != p)
-                if len(child_props) < 2:
-                    continue
-                child = evaluate_subset(store, class_id, child_props, n_s, am)
-                evaluations += 1
-                if child.is_single_pattern:
-                    best_child = child
-                    break
-                if best_child is None or child.edges < best_child.edges:
-                    best_child = child
-        if best_child is None or best_child.edges >= current.edges:
-            # no strict improvement -> Theorem 4.1 prunes everything deeper
-            if best_child is not None and best_child.is_single_pattern \
-                    and best_child.edges < current.edges:
-                current = best_child
-            return _finish(current)
-        current = best_child
-
-
-def _device_sweep(store: TripleStore, class_id: int,
-                  current: StarSweepResult, n_s: int, am: int
-                  ) -> StarSweepResult:
-    """Batched one-sweep candidate evaluation on device (beyond-paper path)."""
-    import jax.numpy as jnp  # noqa: F401  (device path)
-    from .star import sweep_drop_one_device
-
-    props = np.asarray(current.props, np.int32)
-    _, objmat = store.object_matrix(class_id, props)
-    edges, amis = sweep_drop_one_device(jnp.asarray(objmat), am, n_s)
-    edges = np.asarray(edges)
-    amis = np.asarray(amis)
-    # prefer an AMI==1 candidate (paper line 14-18), else the min-edges one
-    single = np.where(amis == 1)[0]
-    j = int(single[0]) if single.size else int(np.argmin(edges))
-    child_props = tuple(int(p) for i, p in enumerate(current.props) if i != j)
-    return StarSweepResult(props=child_props, ami=int(amis[j]), am=am,
-                           n_total_props=n_s, edges=int(edges[j]))
+    warnings.warn(
+        "repro.core.gfsp() is deprecated; use repro.api.Compactor("
+        "detector='gfsp', backend='device' or 'host').detect(...)",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import GreedyDetector, get_backend
+    backend = get_backend("device" if device_sweep else "host")
+    return GreedyDetector().detect(store, class_id, backend=backend,
+                                   props=props)

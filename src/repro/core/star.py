@@ -29,7 +29,10 @@ patterns.
 
 Both a numpy host path and a jax path are provided.  The jax path works on
 fixed-shape object matrices and is the building block for the Pallas-
-accelerated and shard_map-distributed sweeps.
+accelerated and shard_map-distributed sweeps.  The ``use_kernel=`` flags
+on the device helpers are primitive-level knobs: pipeline code selects
+them once via ``repro.api.backends`` (``DeviceBackend(use_kernel=...)`` /
+``ShardedBackend``) instead of threading booleans through call chains.
 """
 from __future__ import annotations
 

@@ -21,7 +21,7 @@ import jax
 from repro.configs import get_arch, reduced
 from repro.models.blocks import Ctx
 from repro.models.lm import LM
-from repro.serving import Engine, Request
+from repro.serving import PREFIX_POLICIES, Engine, Request
 
 
 def main(argv=None) -> dict:
@@ -34,6 +34,10 @@ def main(argv=None) -> dict:
                     help="fraction of the prompt shared across requests")
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default="both",
+                    choices=("both",) + PREFIX_POLICIES.names(),
+                    help="prefix-compaction policy; 'both' runs every "
+                         "registered policy and asserts identical tokens")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_arch(args.arch)) if args.reduced \
@@ -51,32 +55,37 @@ def main(argv=None) -> dict:
                      (args.prompt_len - shared_len,), dtype=np.int32)])
         for _ in range(args.requests)]
 
+    policies = (PREFIX_POLICIES.names() if args.policy == "both"
+                else (args.policy,))
     results = {}
     shared_plan = None
-    for share in (True, False):
+    for policy in policies:
         eng = Engine(model, params, cache_len=args.prompt_len + args.max_new,
-                     chunk=32, share_prefixes=share)
+                     chunk=32, policy=policy)
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, tokens=p, max_new=args.max_new))
         t0 = time.time()
         outs = eng.run()
         dt = time.time() - t0
-        results[share] = outs
+        results[policy] = outs
         plan = eng.last_plan
-        if share:
-            shared_plan = plan
-        label = "factorized" if share else "flat      "
         extra = ""
-        if share and plan is not None:
+        if eng.policy.plan and plan is not None:
+            if shared_plan is None:
+                shared_plan = plan
+            verb = "kv_savings" if eng.policy.share else "would_save"
             extra = (f" molecules={plan.molecule_tokens.shape[0]} "
                      f"depth={plan.depth_chunks * plan.chunk} "
-                     f"kv_savings={plan.savings_pct:.1f}%")
-        print(f"{label}: {len(outs)} requests x {args.max_new} tokens "
+                     f"{verb}={plan.savings_pct:.1f}%")
+        print(f"{policy:10s}: {len(outs)} requests x {args.max_new} tokens "
               f"in {dt:.2f}s{extra}")
-    assert results[True] == results[False], \
-        "factorized and flat serving must produce identical tokens"
-    print("factorized == flat outputs: information preserved (Def. 4.10)")
-    return {"outputs": results[True],
+    first = results[policies[0]]
+    assert all(r == first for r in results.values()), \
+        "every prefix policy must produce identical tokens"
+    if len(policies) > 1:
+        print("all policies produce identical outputs: information "
+              "preserved (Def. 4.10)")
+    return {"outputs": first,
             "plan_savings_pct": shared_plan.savings_pct
             if shared_plan else 0.0}
 

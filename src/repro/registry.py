@@ -1,0 +1,30 @@
+"""Tiny name -> strategy registry shared by the strategy extension points
+(``repro.api`` detectors and execution backends, ``repro.serving`` prefix
+policies).
+
+Kept OUTSIDE the ``repro.api`` package on purpose: importing any
+``repro.api`` submodule executes the package ``__init__`` and with it the
+full detection pipeline (gSpan miner, jax backends), which lightweight
+consumers like ``repro.serving`` must not pay for.
+"""
+from __future__ import annotations
+
+
+class Registry:
+    def __init__(self, kind: str) -> None:
+        self.kind = kind
+        self._items: dict[str, object] = {}
+
+    def register(self, name: str, obj) -> None:
+        self._items[name] = obj
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self._items))
+
+    def get(self, name: str):
+        try:
+            return self._items[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown {self.kind} {name!r}; registered: "
+                f"{', '.join(self.names())}") from None

@@ -2,4 +2,5 @@
 to shared-prefix KV caches."""
 from .prefix_factorization import (  # noqa: F401
     PrefixPlan, plan_prefix_sharing, prefix_edges_cost)
-from .engine import Engine, Request  # noqa: F401
+from .engine import (Engine, PREFIX_POLICIES, PrefixPolicy,  # noqa: F401
+                     Request)

@@ -13,10 +13,18 @@ Flow per admission wave (continuous batching):
 When the planner declines to share (paper Fig. 7 overhead case) the
 engine transparently falls back to plain batched prefill.  Shared and
 unshared paths produce identical tokens (asserted in tests/test_serving).
+
+Prefix compaction is selected by *named policy* (same strategy style as
+``repro.api``): ``"auto"`` runs the bytes-objective planner and honors
+its decision, ``"flat"`` skips planning and serves plain batched
+prefill, ``"measure"`` plans (populating ``Engine.last_plan`` with the
+would-be savings) but serves flat.  The old ``share_prefixes=`` boolean
+is kept as a deprecated alias.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import numpy as np
@@ -24,9 +32,33 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.registry import Registry
 from repro.models.blocks import Ctx
 from repro.train.serve_step import make_decode_step, make_prefill_step
 from .prefix_factorization import plan_prefix_sharing
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixPolicy:
+    """Named KV-prefix compaction strategy.
+
+    ``plan`` runs the #Edges-in-bytes planner (``Engine.last_plan`` is
+    populated); ``share`` additionally honors a positive sharing
+    decision.  ``measure`` plans without sharing -- flat serving plus the
+    would-be savings report.
+    """
+
+    name: str
+    plan: bool       # run the #Edges-in-bytes planner
+    share: bool      # honor a positive sharing decision
+
+
+PREFIX_POLICIES = Registry("prefix policy")
+PREFIX_POLICIES.register("auto", PrefixPolicy("auto", plan=True, share=True))
+PREFIX_POLICIES.register("flat", PrefixPolicy("flat", plan=False,
+                                              share=False))
+PREFIX_POLICIES.register("measure", PrefixPolicy("measure", plan=True,
+                                                 share=False))
 
 
 @dataclasses.dataclass
@@ -40,13 +72,20 @@ class Request:
 class Engine:
     def __init__(self, model, params, *, cache_len: int = 512,
                  chunk: int = 64, ctx: Ctx | None = None,
-                 share_prefixes: bool = True):
+                 policy: str | PrefixPolicy = "auto",
+                 share_prefixes: bool | None = None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
         self.cache_len = cache_len
         self.chunk = chunk
-        self.share = share_prefixes
+        if share_prefixes is not None:
+            warnings.warn(
+                "Engine(share_prefixes=...) is deprecated; use "
+                "policy='auto' or 'flat'", DeprecationWarning, stacklevel=2)
+            policy = "auto" if share_prefixes else "flat"
+        self.policy = (policy if isinstance(policy, PrefixPolicy)
+                       else PREFIX_POLICIES.get(policy))
         self.ctx = ctx or Ctx(cfg=model.cfg)
         self._prefill = jax.jit(make_prefill_step(
             model, ctx=self.ctx, cache_len=cache_len))
@@ -64,11 +103,14 @@ class Engine:
             * jnp.dtype(cfg.dtype).itemsize
         return float(per_layer * cfg.n_layers)
 
-    def _prefill_shared(self, tokens: np.ndarray):
+    def _plan_prefixes(self, tokens: np.ndarray):
         plan = plan_prefix_sharing(
             tokens, chunk=self.chunk,
             kv_bytes_per_token=self._kv_bytes_per_token())
         self.last_plan = plan
+        return plan
+
+    def _prefill_shared(self, tokens: np.ndarray, plan):
         if not plan.shares or plan.molecule_tokens.shape[0] == len(tokens):
             _, cache = self._prefill(self.params, jnp.asarray(tokens))
             return cache, tokens.shape[1]
@@ -103,8 +145,9 @@ class Engine:
             toks = np.stack([r.tokens for r in batch])
         steps = max_new if max_new is not None else max(r.max_new
                                                         for r in batch)
-        if self.share:
-            cache, pos0 = self._prefill_shared(toks)
+        plan = self._plan_prefixes(toks) if self.policy.plan else None
+        if self.policy.share and plan is not None:
+            cache, pos0 = self._prefill_shared(toks, plan)
             # next token from one decode of the last prompt token
             last = jnp.asarray(toks[:, -1:])
             posv = jnp.full((len(batch), 1), pos0 - 1, jnp.int32)
