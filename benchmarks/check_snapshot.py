@@ -1,0 +1,78 @@
+"""CI gate over BENCH_fsp.json (the ``--snapshot`` output).
+
+Asserts the structural invariants the bench-smoke job exists to protect:
+
+1. **Cross-backend parity** -- every detector x backend cell reports the
+   same per-class #Edges and the same triple savings (all cells compact
+   to the identical graph).
+2. **Warm accelerator speed** -- once the shape-bucketed sweep is
+   compiled, the device backend's detection time must stay within
+   ``MAX_WARM_RATIO`` x the host loop on the 800-observation snapshot
+   graph (the seed regression this guards against was ~95x).
+3. **Bounded retracing** -- warm passes of the jax backends must be pure
+   jit-cache hits (``trace_count_warm == 0``).
+
+    python -m benchmarks.check_snapshot [path/to/BENCH_fsp.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+MAX_WARM_RATIO = 3.0
+# wall clocks on shared CI runners jitter; forgive sub-millisecond hosts
+MIN_HOST_MS = 1.0
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_fsp.json")
+
+
+def check(path: str = DEFAULT_PATH) -> list[str]:
+    with open(path) as f:
+        snap = json.load(f)
+    cells = snap["cells"]
+    errors: list[str] = []
+
+    by_key = {(c["detector"], c["backend"]): c for c in cells}
+    ref = cells[0]
+    for c in cells[1:]:
+        if c["edges"] != ref["edges"]:
+            errors.append(
+                f"edges parity broken: {c['detector']}x{c['backend']} "
+                f"{c['edges']} != {ref['edges']}")
+        if c["pct_savings_triples"] != ref["pct_savings_triples"]:
+            errors.append(
+                f"savings parity broken: {c['detector']}x{c['backend']} "
+                f"{c['pct_savings_triples']} != "
+                f"{ref['pct_savings_triples']}")
+
+    host = by_key.get(("gfsp", "host"))
+    device = by_key.get(("gfsp", "device"))
+    if host and device:
+        host_ms = max(host["detect_time_ms"], MIN_HOST_MS)
+        warm_ms = device["detect_time_ms_warm"]
+        if warm_ms > MAX_WARM_RATIO * host_ms:
+            errors.append(
+                f"warm device detect {warm_ms:.1f} ms exceeds "
+                f"{MAX_WARM_RATIO}x host {host_ms:.1f} ms")
+    for key in (("gfsp", "device"), ("gfsp", "sharded")):
+        cell = by_key.get(key)
+        if cell and cell.get("trace_count_warm", 0) != 0:
+            errors.append(f"{key[0]}x{key[1]} retraced on the warm pass "
+                          f"({cell['trace_count_warm']} traces)")
+    return errors
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_PATH
+    errors = check(path)
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"snapshot OK: {os.path.abspath(path)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,41 +22,64 @@ SNAPSHOT_CELLS = [("gfsp", "host"), ("gfsp", "device"), ("gfsp", "sharded"),
 
 
 def snapshot(fast: bool = True) -> dict:
-    """FSP perf snapshot on the synthetic sensor graph: exec_time_ms,
-    savings %, and subset evaluations for every detector x backend cell.
-    Written to BENCH_fsp.json so the bench trajectory is tracked in CI."""
+    """FSP perf snapshot on the synthetic sensor graph.
+
+    Each detector x backend cell runs TWICE: the cold pass pays jit
+    tracing for the shape-bucketed sweep (one trace per power-of-two
+    bucket -- recorded as ``trace_count_cold``), the warm pass must be
+    pure cache hits (``trace_count_warm`` is asserted 0 for the jax
+    backends by ``benchmarks.check_snapshot``).  Written to
+    BENCH_fsp.json so the bench trajectory is tracked in CI."""
     from repro.api import Compactor
+    from repro.core import sweep as core_sweep
     from repro.data.synthetic import SensorGraphSpec, generate
 
     n_obs = 800 if fast else 4_000
     store = generate(SensorGraphSpec(n_observations=n_obs, seed=42))
     cells = []
     reference = None
+    core_sweep.reset_trace_stats()
     for det, be in SNAPSHOT_CELLS:
         comp = Compactor(detector=det, backend=be)
+        traces0 = core_sweep.trace_count()
         t0 = time.perf_counter()
         rep = comp.run(store)
-        wall_ms = (time.perf_counter() - t0) * 1e3
+        cold_ms = (time.perf_counter() - t0) * 1e3
+        cold_detect = sum(d.exec_time_ms for d in rep.detections.values())
+        traces_cold = core_sweep.trace_count() - traces0
+        t0 = time.perf_counter()
+        rep_warm = comp.run(store)
+        warm_ms = (time.perf_counter() - t0) * 1e3
+        warm_detect = sum(d.exec_time_ms
+                          for d in rep_warm.detections.values())
+        traces_warm = core_sweep.trace_count() - traces0 - traces_cold
         dets = rep.detections
         cell = {
             "detector": det, "backend": be,
-            "exec_time_ms": round(wall_ms, 2),
-            "detect_time_ms": round(sum(d.exec_time_ms
-                                        for d in dets.values()), 2),
+            "exec_time_ms": round(cold_ms, 2),
+            "exec_time_ms_warm": round(warm_ms, 2),
+            "detect_time_ms": round(cold_detect, 2),
+            "detect_time_ms_warm": round(warm_detect, 2),
+            "trace_count_cold": traces_cold,
+            "trace_count_warm": traces_warm,
             "evaluations": int(sum(d.evaluations for d in dets.values())),
             "n_classes": len(rep.plan),
             "edges": {store.dict.term(c): d.edges for c, d in dets.items()},
             "pct_savings_triples": round(rep.pct_savings_triples, 2),
         }
         cells.append(cell)
-        # every cell must compact to the identical graph
+        # every cell (and both passes) must compact to the identical graph
         if reference is None:
             reference = (cell["edges"], rep.n_triples_after)
         assert (cell["edges"], rep.n_triples_after) == reference, \
             (det, be, cell["edges"], reference)
+        assert rep_warm.n_triples_after == rep.n_triples_after, (det, be)
     out = {
         "graph": {"n_observations": n_obs, "n_triples": store.n_triples,
                   "n_nodes": store.n_nodes, "seed": 42},
+        "bucket_shapes": {
+            "/".join(str(x) for x in k): v
+            for k, v in sorted(core_sweep.TRACE_COUNTS.items())},
         "cells": cells,
     }
     with open(SNAPSHOT_PATH, "w") as f:
@@ -65,7 +88,9 @@ def snapshot(fast: bool = True) -> dict:
     print(f"\n== BENCH_fsp snapshot ({os.path.abspath(SNAPSHOT_PATH)}) ==")
     for c in cells:
         print(f"{c['detector']:6s} x {c['backend']:8s} "
-              f"{c['exec_time_ms']:9.1f} ms  "
+              f"cold {c['exec_time_ms']:9.1f} ms  "
+              f"warm {c['exec_time_ms_warm']:8.1f} ms  "
+              f"traces={c['trace_count_cold']}/{c['trace_count_warm']}  "
               f"evals={c['evaluations']:<6d} "
               f"savings={c['pct_savings_triples']:.2f}%")
     return out

@@ -2,30 +2,32 @@
 
 The paper's algorithms are backend-agnostic -- every step of E.FSP / G.FSP
 reduces to "evaluate ``#Edges(SP', C, G)`` for candidate subsets SP'".
-Before this module the choice of execution substrate leaked through the
-call graph as scattered booleans (``device_sweep=`` in ``core.gfsp``,
-``use_kernel=`` in ``core.star`` / ``core.distributed``).  A backend now
-owns that decision behind two methods:
+A backend owns the execution substrate behind two methods:
 
 * ``evaluate(store, class_id, props, n_s, am)`` -- one candidate subset
   (Def. 4.8 objective), exact host arithmetic.
-* ``sweep(store, class_id, current, n_s, am)`` -- all one-property-removed
-  children of ``current`` in one shot, returning the best child (AMI == 1
-  preferred, else minimum ``#Edges``, first index breaking ties) and the
-  number of subset evaluations charged.  Every backend charges the SAME
-  count for the same sweep -- ``len(current.props)`` when the sweep runs,
-  0 when the children would be sub-star (``|SP'| < 2``) -- so
-  ``FSPResult.evaluations`` is backend-invariant (the seed implementation
-  disagreed between host and device paths; see ``core/gfsp.py``).
+* ``workspace(store, class_id, props, n_s, am)`` -- a per-(class, descent)
+  :class:`repro.core.sweep.SweepWorkspace`: the object matrix is
+  extracted through the ``GraphIndex`` joins ONCE, device backends upload
+  it ONCE, and every greedy descent step serves its drop-one sweep from
+  that parent buffer (host backends slice it; device backends mask
+  columns on device inside a shape-bucketed jitted sweep that compiles
+  once per power-of-two bucket).
+
+The greedy loop itself (``GreedyDetector``) charges the SAME evaluation
+count for the same sweep on every backend -- ``len(SP)`` when the sweep
+runs, 0 when the children would be sub-star (``|SP'| < 2``) -- so
+``FSPResult.evaluations`` is backend-invariant.
 
 Three implementations are registered by name:
 
 ==========  =================================================================
 ``host``    the paper's sequential numpy loop (reference semantics)
 ``device``  one batched jax lowering per sweep (vmapped signature group-by,
-            Pallas kernels when available)
-``sharded`` the device sweep with rows sharded over the mesh's data-parallel
-            axes, layout routed through ``repro.dist.sharding.make_plan``
+            Pallas kernels when available), bucket-cached across classes
+``sharded`` the bucketed sweep with rows sharded over the mesh's
+            data-parallel axes, layout routed through
+            ``repro.dist.sharding.make_plan``
 ==========  =================================================================
 """
 from __future__ import annotations
@@ -33,9 +35,9 @@ from __future__ import annotations
 import types
 from typing import Protocol, Sequence, runtime_checkable
 
-import numpy as np
-
 from repro.core.star import StarSweepResult, evaluate_subset
+from repro.core.sweep import (DeviceSweepWorkspace, HostSweepWorkspace,
+                              ShardedSweepWorkspace, SweepWorkspace)
 from repro.core.triples import TripleStore
 
 from repro.registry import Registry
@@ -51,21 +53,9 @@ class ExecutionBackend(Protocol):
                  props: Sequence[int], n_s: int, am: int) -> StarSweepResult:
         ...
 
-    def sweep(self, store: TripleStore, class_id: int,
-              current: StarSweepResult, n_s: int, am: int
-              ) -> tuple[StarSweepResult | None, int]:
+    def workspace(self, store: TripleStore, class_id: int,
+                  props: Sequence[int], n_s: int, am: int) -> SweepWorkspace:
         ...
-
-
-def _pick_child(current: StarSweepResult, edges: np.ndarray,
-                amis: np.ndarray, n_s: int, am: int) -> StarSweepResult:
-    """Shared selection rule: first AMI == 1 candidate (paper Alg. 2 lines
-    14-18), else minimum #Edges, first index breaking ties."""
-    single = np.where(amis == 1)[0]
-    j = int(single[0]) if single.size else int(np.argmin(edges))
-    child_props = tuple(p for i, p in enumerate(current.props) if i != j)
-    return StarSweepResult(props=child_props, ami=int(amis[j]), am=am,
-                           n_total_props=n_s, edges=int(edges[j]))
 
 
 class HostBackend:
@@ -76,22 +66,12 @@ class HostBackend:
     def evaluate(self, store, class_id, props, n_s, am):
         return evaluate_subset(store, class_id, props, n_s, am)
 
-    def sweep(self, store, class_id, current, n_s, am):
-        k = len(current.props)
-        if k < 3:        # children would have < 2 properties: not stars
-            return None, 0
-        edges = np.empty((k,), np.int64)
-        amis = np.empty((k,), np.int64)
-        for j in range(k):
-            child_props = tuple(p for i, p in enumerate(current.props)
-                                if i != j)
-            child = evaluate_subset(store, class_id, child_props, n_s, am)
-            edges[j], amis[j] = child.edges, child.ami
-        return _pick_child(current, edges, amis, n_s, am), k
+    def workspace(self, store, class_id, props, n_s, am):
+        return HostSweepWorkspace(store, class_id, props, n_s, am)
 
 
 class DeviceBackend:
-    """Batched jax sweep: all |SP| candidates in one lowering."""
+    """Batched jax sweep: all |SP| candidates in one bucketed lowering."""
 
     name = "device"
 
@@ -102,29 +82,21 @@ class DeviceBackend:
         # single-subset evaluation is cheaper (and exact) on host
         return evaluate_subset(store, class_id, props, n_s, am)
 
-    def sweep(self, store, class_id, current, n_s, am):
-        k = len(current.props)
-        if k < 3:
-            return None, 0
-        import jax.numpy as jnp
-        from repro.core.star import sweep_drop_one_device
-        props = np.asarray(current.props, np.int32)
-        _, objmat = store.object_matrix(class_id, props)
-        edges, amis = sweep_drop_one_device(
-            jnp.asarray(objmat), am, n_s, use_kernel=self.use_kernel)
-        return _pick_child(current, np.asarray(edges), np.asarray(amis),
-                           n_s, am), k
+    def workspace(self, store, class_id, props, n_s, am):
+        return DeviceSweepWorkspace(store, class_id, props, n_s, am,
+                                    use_kernel=self.use_kernel)
 
 
 class ShardedBackend:
-    """Device sweep with the object matrix row-sharded over the mesh.
+    """Bucketed sweep with the object matrix row-sharded over the mesh.
 
     Layout policy is routed through the ``repro.dist`` planner: the mesh's
     data-parallel axes come from ``sharding.make_plan`` (DP ladder,
-    tensor-parallel axis excluded), rows are padded to the DP degree and
-    placed with ``PartitionSpec(dp_axes, None)``, and padding rows are
-    masked out of the distinct-signature count.  With ``mesh=None`` this
-    degrades to the single-device batched sweep (useful for tests).
+    tensor-parallel axis excluded), rows are bucket-padded to the DP
+    degree and placed with ``PartitionSpec(dp_axes, None)``, and padding
+    rows are masked out of the distinct-signature count.  With
+    ``mesh=None`` this degrades to the single-device bucketed sweep
+    (useful for tests, and it shares the device jit cache).
 
     On a real mesh each candidate's AMI runs through
     ``core.distributed.ami_bucketed`` -- the explicit shard_map
@@ -150,54 +122,13 @@ class ShardedBackend:
                 tp=True, fsdp=False, seq_shard=False)
             self.plan = dsh.make_plan(cfg, mesh)
 
-    def _dp_degree(self) -> int:
-        if self.plan is None:
-            return 1
-        return int(np.prod([self.plan.size(a) for a in self.plan.dp_axes],
-                           initial=1))
-
     def evaluate(self, store, class_id, props, n_s, am):
         return evaluate_subset(store, class_id, props, n_s, am)
 
-    def sweep(self, store, class_id, current, n_s, am):
-        k = len(current.props)
-        if k < 3:
-            return None, 0
-        import jax
-        import jax.numpy as jnp
-        from repro.core.distributed import (ami_bucketed, pad_rows,
-                                            sweep_drop_one)
-        from repro.core.star import num_edges
-        props = np.asarray(current.props, np.int32)
-        _, objmat = store.object_matrix(class_id, props)
-        padded, n_real = pad_rows(objmat.astype(np.int32, copy=False),
-                                  max(self._dp_degree(), 1))
-        valid_h = np.arange(padded.shape[0]) < n_real
-        if self.mesh is None:
-            edges, amis = sweep_drop_one(jnp.asarray(padded),
-                                         jnp.asarray(valid_h), am, n_s=n_s,
-                                         use_kernel=self.use_kernel)
-            edges, amis = np.asarray(edges), np.asarray(amis)
-        else:
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            from repro.dist.sharding import batch_axes_for
-            axes = (batch_axes_for(self.plan, padded.shape[0])
-                    or tuple(self.plan.dp_axes))
-            dev = jax.device_put(padded,
-                                 NamedSharding(self.mesh, P(axes, None)))
-            valid = jax.device_put(valid_h,
-                                   NamedSharding(self.mesh, P(axes)))
-            amis = np.empty((k,), np.int64)
-            for j in range(k):
-                # column drop stays on device (row sharding preserved);
-                # one host->device upload per sweep, not per candidate
-                cand = jnp.delete(dev, j, axis=1,
-                                  assume_unique_indices=True)
-                amis[j] = int(ami_bucketed(cand, valid, self.mesh,
-                                           dp_axes=axes,
-                                           use_kernel=self.use_kernel))
-            edges = np.asarray([num_edges(a, am, k - 1, n_s) for a in amis])
-        return _pick_child(current, edges, amis, n_s, am), k
+    def workspace(self, store, class_id, props, n_s, am):
+        return ShardedSweepWorkspace(store, class_id, props, n_s, am,
+                                     mesh=self.mesh, plan=self.plan,
+                                     use_kernel=self.use_kernel)
 
 
 BACKENDS = Registry("execution backend")

@@ -37,6 +37,7 @@ import numpy as np
 from repro.core.factorize import (FactorizationResult, apply_molecule_map,
                                   factorize_classes)
 from repro.core.gfsp import FSPResult
+from repro.core.index import in_sorted
 from repro.core.star import row_groups
 from repro.core.triples import TripleStore
 
@@ -270,11 +271,14 @@ class Compactor:
             trips = list(new_triples)
             if trips:
                 flat = [t for spo in trips for t in spo]
-                rows = g.dict.ids(flat).astype(np.int32).reshape(-1, 3)
+                rows = g.dict.ids(flat).reshape(-1, 3)
             else:
                 rows = np.empty((0, 3), np.int32)
-        combined = TripleStore.from_ids(
-            g.dict, np.concatenate([g.spo, rows], axis=0))
+        # merge-on-append: the (usually small) batch merges into the
+        # sorted triple array and the live GraphIndex in O(n + m log n);
+        # the factorized graph is never re-sorted or re-indexed wholesale
+        combined = g.copy()
+        combined.add_ids(rows)
         n_absorbed = n_new_sg = n_reused = 0
         # classes are processed sequentially against the running graph so
         # overlapping-class entities keep the same semantics as a full
@@ -286,7 +290,7 @@ class Compactor:
             ents, objmat = combined.object_matrix(cid, props_arr)
             if ents.size == 0:
                 continue
-            raw = ~np.isin(ents, sg_arr)      # never re-factorize surrogates
+            raw = ~in_sorted(ents, sg_arr)    # never re-factorize surrogates
             if not raw.any():
                 continue
             r_ents, r_mat = ents[raw], objmat[raw]
@@ -314,14 +318,22 @@ class Compactor:
             n_reused += int(counts.shape[0]) - len(fresh)
             n_absorbed += int(r_ents.shape[0])
             # rewrite only the absorbed entities' own rows; the rest of
-            # the (possibly huge) factorized graph passes through
+            # the (possibly huge) factorized graph passes through as a
+            # presorted slice and the rewritten rows merge back in.  The
+            # live index follows the same remove-then-merge path (a row
+            # subset of a sorted index stays sorted), so no class of this
+            # loop ever triggers a full O(|G| log |G|) re-index.
             spo = combined.spo
-            touched = np.isin(spo[:, 0], r_ents)
+            touched = in_sorted(spo[:, 0], r_ents)
             rewritten = apply_molecule_map(
                 spo[touched], r_ents, sg_of_group[inv].astype(np.int32),
                 props_arr, cid, combined.TYPE, combined.INSTANCE_OF)
-            combined = TripleStore.from_ids(
-                combined.dict, np.concatenate([spo[~touched], rewritten]))
+            idx = combined.index
+            kept_index = idx.filtered(~in_sorted(idx.rows[:, 0], r_ents))
+            combined = TripleStore.from_ids(combined.dict, spo[~touched],
+                                            presorted=True)
+            combined.add_ids(rewritten)
+            combined._index = kept_index.merged(rewritten)
         self._graph = combined
         return UpdateReport(
             graph=combined, n_new_triples=int(rows.shape[0]),

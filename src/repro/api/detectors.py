@@ -33,6 +33,7 @@ import numpy as np
 from repro.core.efsp import build_subgraphs_dict
 from repro.core.gfsp import FSPResult
 from repro.core.star import StarSweepResult, num_edges, star_groups
+from repro.core.sweep import pick_child
 from repro.core.triples import TripleStore
 
 from .backends import ExecutionBackend, HostBackend, Registry, get_backend
@@ -86,8 +87,16 @@ class GreedyDetector:
     best = min over candidates, accept iff it strictly improves).  Ties
     break by first candidate encountered -- assumption (c) of §4.3.
 
+    The whole descent runs against ONE ``backend.workspace``: the class's
+    object matrix is extracted (and, on device backends, uploaded) once,
+    and every sweep -- including the initial full-S evaluation -- is
+    served from that parent buffer.  Evaluation accounting is
+    backend-invariant by construction: 1 for the initial subset, then
+    ``len(SP)`` per executed sweep, 0 when the children would be sub-star
+    (``|SP'| < 2``, no sweep runs).
+
     Worst case ``n(n+1)/2`` subset evaluations (paper §4.3) vs E.FSP's
-    ``2^n``; each sweep is one ``backend.sweep`` call.
+    ``2^n``; each sweep is one ``workspace.sweep`` call.
     """
 
     name = "gfsp"
@@ -102,18 +111,22 @@ class GreedyDetector:
                                     n_total_props=n_s, edges=0)
             return _result(store, class_id, empty, am, iterations,
                            evaluations, t0)
-        current = backend.evaluate(store, class_id,
-                                   tuple(int(p) for p in s_all), n_s, am)
+        ws = backend.workspace(store, class_id,
+                               tuple(int(p) for p in s_all), n_s, am)
+        current = ws.evaluate_current()
         evaluations += 1
         while True:
             iterations += 1
-            if len(current.props) < 2 or current.is_single_pattern:
+            k = len(current.props)
+            # stop: children would be sub-star (|SP'| < 2) or one pattern
+            if k < 3 or current.is_single_pattern:
                 break
-            best_child, n_evals = backend.sweep(store, class_id, current,
-                                                n_s, am)
-            evaluations += n_evals
-            if best_child is None or best_child.edges >= current.edges:
+            edges, amis = ws.sweep()
+            evaluations += k
+            best_child, j = pick_child(current, edges, amis, n_s, am)
+            if best_child.edges >= current.edges:
                 break          # Theorem 4.1 prunes everything deeper
+            ws.descend(j)
             current = best_child
         return _result(store, class_id, current, am, iterations,
                        evaluations, t0)
@@ -204,7 +217,7 @@ class GSpanBaseline:
                                        am=am, n_total_props=n_s, edges=total)
         if best is None:       # nothing mined: keep the full set unscored
             if n_s:
-                best = HostBackend().evaluate(
+                best = (backend or HostBackend()).evaluate(
                     store, class_id, tuple(int(p) for p in s_all), n_s, am)
                 evaluations += 1
             else:

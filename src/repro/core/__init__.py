@@ -6,8 +6,11 @@ detectors and execution backends); the ``gfsp`` / ``efsp`` / ``factorize``
 free functions re-exported here are deprecated shims kept for
 compatibility."""
 from .triples import TermDict, TripleStore, RDF_TYPE, INSTANCE_OF  # noqa: F401
+from .index import GraphIndex, in_sorted, merge_disjoint, sort_unique  # noqa: F401
 from .star import (ami, multiplicities, num_edges, evaluate_subset,  # noqa: F401
                    star_groups, row_groups, StarSweepResult)
+from .sweep import (SweepWorkspace, HostSweepWorkspace,  # noqa: F401
+                    DeviceSweepWorkspace, ShardedSweepWorkspace, pick_child)
 from .gfsp import gfsp, FSPResult  # noqa: F401
 from .efsp import efsp, build_subgraphs_dict  # noqa: F401
 from .factorize import factorize, factorize_classes, FactorizationResult  # noqa: F401

@@ -122,9 +122,9 @@ def ami_bucketed(objmat, valid, mesh, *, dp_axes=("data",),
 
     def body(mat, val):
         nl = mat.shape[0]
-        sig = kops.row_signature(mat, use_kernel=use_kernel)  # (nl,2) u32
-        sentinel = jnp.uint32(0xFFFFFFFF)
-        sig = jnp.where(val[:, None], sig, sentinel)
+        # mask-aware signature: padding rows get the shared sentinel
+        sig = kops.row_signature(mat, valid=val, use_kernel=use_kernel)
+        sentinel = jnp.uint32(kops.SIG_SENTINEL)
         owner = (sig[:, 0] % jnp.uint32(n_shards)).astype(jnp.int32)
         owner = jnp.where(val, owner, n_shards)       # invalid -> overflow
         cap = max(int(cap_factor * nl / n_shards) + 8, 8)

@@ -155,7 +155,9 @@ def ami_device(objmat, valid=None, use_kernel: bool = True):
     """AMI on device: #distinct rows of ``objmat`` (n, k) int32.
 
     ``valid``: optional (n,) bool mask (rows excluded from counting) --
-    needed by the distributed sweep where shards are padded.
+    needed by the bucketed/distributed sweeps where buffers are padded.
+    The mask is applied inside ``kernels.ops.row_signature`` (one shared
+    sentinel convention); here we only subtract the sentinel segment.
 
     Strategy (TPU-idiomatic group-by): hash each row to a 64-bit signature
     (two uint32 lanes, Pallas kernel when available), lexsort, count segment
@@ -164,11 +166,8 @@ def ami_device(objmat, valid=None, use_kernel: bool = True):
     """
     jax, jnp = _jax()
     from repro.kernels import ops as kops
-    sig = kops.row_signature(objmat, use_kernel=use_kernel)  # (n, 2) uint32
-    if valid is not None:
-        # push invalid rows to one reserved signature; subtract its segment
-        sentinel = jnp.uint32(0xFFFFFFFF)
-        sig = jnp.where(valid[:, None], sig, sentinel)
+    sig = kops.row_signature(objmat, valid=valid,
+                             use_kernel=use_kernel)  # (n, 2) uint32
     sig_sorted, _ = kops.sort_signatures(sig)
     _, n_groups = kops.seg_boundaries(sig_sorted, use_kernel=use_kernel)
     if valid is not None:
@@ -177,12 +176,16 @@ def ami_device(objmat, valid=None, use_kernel: bool = True):
     return n_groups
 
 
-def multiplicities_device(objmat, use_kernel: bool = True):
-    """Per-row multiplicity M on device (sort + segment length + unsort)."""
+def multiplicities_device(objmat, valid=None, use_kernel: bool = True):
+    """Per-row multiplicity M on device (sort + segment length + unsort).
+
+    ``valid``: optional padding mask, same convention as :func:`ami_device`
+    (invalid rows collapse into one sentinel group whose multiplicity the
+    caller must ignore)."""
     jax, jnp = _jax()
     from repro.kernels import ops as kops
     n = objmat.shape[0]
-    sig = kops.row_signature(objmat, use_kernel=use_kernel)
+    sig = kops.row_signature(objmat, valid=valid, use_kernel=use_kernel)
     sig_sorted, order = kops.sort_signatures(sig)
     new_seg, _ = kops.seg_boundaries(sig_sorted, use_kernel=use_kernel)
     seg_id = jnp.cumsum(new_seg) - 1                      # group of sorted row
@@ -196,20 +199,8 @@ def edges_formula_device(ami_value, am, n_sp, n_s):
     jax, jnp = _jax()
     return ami_value * (n_sp + 1) + am * (n_s - n_sp)
 
-
-def sweep_drop_one_device(objmat, am: int, n_s: int, use_kernel: bool = True):
-    """Evaluate all |SP| one-property-removed subsets of SP in one lowering.
-
-    The paper's G.FSP evaluates candidate subsets sequentially; on TPU the
-    candidates are data-parallel: we build the (|SP|, n, |SP|-1) stack of
-    column-dropped matrices with a gather and vmap the AMI computation.
-    Returns (edges[|SP|], ami[|SP|]) aligned with dropped-column index.
-    """
-    jax, jnp = _jax()
-    n, k = objmat.shape
-    # column index map: for drop j, keep columns [0..k-1] != j
-    keep = np.stack([np.delete(np.arange(k), j) for j in range(k)])  # (k, k-1)
-    stacked = objmat[:, keep.T].transpose(2, 0, 1)  # (k, n, k-1)
-    amis = jax.vmap(lambda m: ami_device(m, use_kernel=use_kernel))(stacked)
-    edges = edges_formula_device(amis, am, k - 1, n_s)
-    return edges, amis
+# NOTE: the gather-based per-shape drop-one sweep that used to live here
+# (``sweep_drop_one_device``) is superseded by the shape-bucketed,
+# column-masked sweep in ``core.sweep`` (one compile per power-of-two
+# bucket instead of one per (n, k) pair); ``core.distributed.sweep_drop_one``
+# remains as the shard_map-facing variant.

@@ -1,0 +1,358 @@
+"""Shape-bucketed sweep workspaces: the greedy descent's hot loop.
+
+The seed executed every G.FSP descent step by re-extracting the class's
+object matrix from the store (full-graph ``np.isin`` scans per candidate)
+and -- on the jax backends -- re-tracing the drop-one sweep at a fresh
+``(n, k)`` shape for every (class, candidate-size) pair.  That made the
+"accelerated" paths ~2 orders of magnitude slower than the numpy loop
+(BENCH_fsp.json: 3089 ms device vs 32 ms host detect).
+
+A :class:`SweepWorkspace` fixes both costs structurally:
+
+* **one extraction per class**: the object matrix over the *full*
+  property set S is pulled through the ``GraphIndex`` joins once, at
+  descent start.  Every candidate evaluation -- on every backend,
+  including host -- is a column view of that parent matrix; the store is
+  never touched again.  (Consequence: all backends share the same
+  §4.3-(a) entity universe -- entities complete over S -- which the seed's
+  host loop re-decided per subset while the device path did not.)
+* **one upload per class**: the device workspaces ship the matrix to
+  device once; descent steps drop columns *on device* by masking them to
+  a constant, so child matrices never round-trip through the host.
+* **one compile per bucket shape**: ``(n, k)`` is padded up to a
+  power-of-two bucket (rows carry a validity mask, columns a drop mask),
+  so the jitted sweep traces once per bucket and is cache-hit for every
+  subsequent class, descent level, and ``Compactor`` instance.  Masking a
+  column to zero is AMI-exact: the column contributes the same constant
+  to every row's signature, so the distinct-row count equals the count
+  over the surviving columns.
+
+``TRACE_COUNTS`` records one entry per traced bucket shape -- the
+benchmark snapshot and the regression tests assert the trace count stays
+bounded by the number of distinct buckets, not the number of sweeps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from .star import StarSweepResult, ami, num_edges
+from .triples import TripleStore
+
+# -- bucket ladder -----------------------------------------------------------
+
+BUCKET_MIN_ROWS = 64    # floor: tiny classes share one compiled shape
+BUCKET_MIN_COLS = 2     # star patterns need >= 2 properties
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length()
+
+
+def bucket_rows(n: int, multiple: int = 1) -> int:
+    """Row bucket: next power of two >= max(n, floor), rounded up to the
+    sharding ``multiple`` (DP degree) so shards stay equal-sized."""
+    nb = max(_next_pow2(n), BUCKET_MIN_ROWS)
+    if multiple > 1:
+        nb += (-nb) % multiple
+    return nb
+
+
+def bucket_cols(k: int) -> int:
+    return max(_next_pow2(k), BUCKET_MIN_COLS)
+
+
+# -- jit trace accounting ----------------------------------------------------
+
+TRACE_COUNTS: dict[tuple, int] = {}
+
+
+def _note_trace(kind: str, shape: tuple) -> None:
+    # executed at trace time only: jit cache hits never reach the body
+    key = (kind,) + tuple(int(x) for x in shape)
+    TRACE_COUNTS[key] = TRACE_COUNTS.get(key, 0) + 1
+
+
+def reset_trace_stats() -> None:
+    TRACE_COUNTS.clear()
+
+
+def clear_compile_cache() -> None:
+    """Drop the compiled sweep functions AND the trace counters -- gives
+    tests a deterministic cold start regardless of process history."""
+    _bucket_sweep_fn.cache_clear()
+    _sharded_ami_fn.cache_clear()
+    TRACE_COUNTS.clear()
+
+
+def trace_count() -> int:
+    """Total sweep traces since the last reset (cache misses only)."""
+    return sum(TRACE_COUNTS.values())
+
+
+def distinct_bucket_shapes() -> int:
+    return len(TRACE_COUNTS)
+
+
+# -- the compiled bucket sweep ----------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _jax():
+    import jax
+    import jax.numpy as jnp
+    return jax, jnp
+
+
+@functools.lru_cache(maxsize=None)
+def _bucket_sweep_fn(use_kernel: bool):
+    """Build (once) the jitted drop-one sweep over a padded bucket.
+
+    All data-dependent quantities -- ``am``, the child cardinality, the
+    total property count -- enter as traced scalars, so the jit cache is
+    keyed ONLY by the bucket shape ``(n_b, k_b)``.
+    """
+    jax, jnp = _jax()
+    from .star import ami_device
+
+    def sweep(objmat, valid, col_masks, am, n_sp_child, n_s):
+        _note_trace("sweep", objmat.shape + (col_masks.shape[0],))
+
+        def one(mask):
+            return ami_device(objmat * mask[None, :], valid=valid,
+                              use_kernel=use_kernel)
+
+        amis = jax.vmap(one)(col_masks)
+        edges = amis * (n_sp_child + 1) + am * (n_s - n_sp_child)
+        return edges, amis
+
+    return jax.jit(sweep)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_ami_fn(mesh, dp_axes: tuple, use_kernel: bool):
+    """Jitted masked-candidate AMI through the explicit hash-bucket
+    collective schedule (``core.distributed.ami_bucketed``): the only
+    distinct-count lowering that is exact on real multi-axis meshes."""
+    jax, jnp = _jax()
+    from .distributed import ami_bucketed
+
+    def one(objmat, valid, col_mask):
+        _note_trace("sharded", objmat.shape)
+        return ami_bucketed(objmat * col_mask[None, :], valid, mesh,
+                            dp_axes=dp_axes, use_kernel=use_kernel)
+
+    return jax.jit(one)
+
+
+# -- selection rule ----------------------------------------------------------
+
+def pick_child(current: StarSweepResult, edges: np.ndarray,
+               amis: np.ndarray, n_s: int, am: int
+               ) -> tuple[StarSweepResult, int]:
+    """Shared selection rule: first AMI == 1 candidate (paper Alg. 2
+    lines 14-18), else minimum #Edges, first index breaking ties.
+    Returns the child result and the dropped position ``j``."""
+    single = np.where(amis == 1)[0]
+    j = int(single[0]) if single.size else int(np.argmin(edges))
+    child_props = tuple(p for i, p in enumerate(current.props) if i != j)
+    child = StarSweepResult(props=child_props, ami=int(amis[j]), am=am,
+                            n_total_props=n_s, edges=int(edges[j]))
+    return child, j
+
+
+# -- workspaces --------------------------------------------------------------
+
+@runtime_checkable
+class SweepWorkspace(Protocol):
+    """Per-(class, descent) state: extract once, sweep many.
+
+    ``props`` is the *current* property subset (shrinks as the descent
+    drops columns); ``sweep()`` returns ``(edges, amis)`` aligned with it
+    (entry ``j`` = subset with ``props[j]`` removed); ``descend(j)``
+    commits the drop.
+    """
+
+    n_s: int
+    am: int
+
+    @property
+    def props(self) -> tuple[int, ...]: ...
+
+    def evaluate_current(self) -> StarSweepResult: ...
+
+    def sweep(self) -> tuple[np.ndarray, np.ndarray]: ...
+
+    def descend(self, j: int) -> None: ...
+
+
+class _WorkspaceBase:
+    """Shared extraction + bookkeeping: one index-join per descent."""
+
+    def __init__(self, store: TripleStore, class_id: int,
+                 props: Sequence[int], n_s: int, am: int) -> None:
+        self.class_id = int(class_id)
+        self.n_s = int(n_s)
+        self.am = int(am)
+        self._all_props = tuple(int(p) for p in props)
+        self.entities, self.matrix = store.object_matrix(
+            class_id, self._all_props)
+        self._active = list(range(len(self._all_props)))
+
+    @property
+    def props(self) -> tuple[int, ...]:
+        return tuple(self._all_props[i] for i in self._active)
+
+    @property
+    def k(self) -> int:
+        return len(self._active)
+
+    def evaluate_current(self) -> StarSweepResult:
+        # exact host arithmetic over the already-extracted parent matrix
+        a = ami(self.matrix[:, self._active]) if self._active else 0
+        return StarSweepResult(
+            props=self.props, ami=a, am=self.am, n_total_props=self.n_s,
+            edges=num_edges(a, self.am, self.k, self.n_s))
+
+    def descend(self, j: int) -> None:
+        # pure bookkeeping: device buffers are untouched (the dropped
+        # column is simply masked out of every subsequent sweep)
+        del self._active[j]
+
+
+class HostSweepWorkspace(_WorkspaceBase):
+    """Sequential numpy sweep over column views of the parent matrix."""
+
+    def sweep(self) -> tuple[np.ndarray, np.ndarray]:
+        k = self.k
+        edges = np.empty((k,), np.int64)
+        amis = np.empty((k,), np.int64)
+        for j in range(k):
+            cols = self._active[:j] + self._active[j + 1:]
+            a = ami(self.matrix[:, cols])
+            amis[j] = a
+            edges[j] = num_edges(a, self.am, k - 1, self.n_s)
+        return edges, amis
+
+
+class DeviceSweepWorkspace(_WorkspaceBase):
+    """Batched jax sweep over a bucket-padded on-device parent buffer.
+
+    Upload happens once, in the constructor; each ``sweep()`` ships only
+    a ``(k_b, k_b)`` drop-mask stack.  Already-descended columns stay in
+    the buffer, permanently masked -- dropping a column is a host-side
+    bookkeeping update, not a transfer.
+    """
+
+    def __init__(self, store, class_id, props, n_s, am, *,
+                 use_kernel: bool = True) -> None:
+        super().__init__(store, class_id, props, n_s, am)
+        self.use_kernel = bool(use_kernel)
+        self._dev = None            # uploaded lazily, on the first sweep
+        self._valid = None
+
+    def _placement(self, n_rows: int):
+        """(row_multiple, (matrix, mask) shardings | None) -- overridden
+        by the mesh-sharded workspace."""
+        return 1, None
+
+    def _ensure_uploaded(self) -> None:
+        """Bucket-pad and ship the parent matrix to device ONCE, on first
+        use: classes whose descent never sweeps (|SP| <= 2, or a single
+        pattern at full S) stay entirely on host."""
+        if self._dev is not None:
+            return
+        jax, jnp = _jax()
+        n, k = self.matrix.shape
+        row_multiple, sharding = self._placement(n)
+        self.n_bucket = bucket_rows(n, row_multiple)
+        self.k_bucket = bucket_cols(k)
+        buf = np.zeros((self.n_bucket, self.k_bucket), np.int32)
+        buf[:n, :k] = self.matrix
+        valid = np.arange(self.n_bucket) < n
+        if sharding is not None:
+            self._dev = jax.device_put(buf, sharding[0])
+            self._valid = jax.device_put(valid, sharding[1])
+        else:
+            self._dev = jnp.asarray(buf)
+            self._valid = jnp.asarray(valid)
+
+    def _col_masks(self) -> np.ndarray:
+        """(k_b, k_b) int32: row j = active columns with column j dropped.
+
+        The stack always spans the FULL bucket width -- rows for inactive
+        or padding columns are no-op candidates (mask == current active
+        set) whose results the host discards -- so the compiled sweep
+        shape is invariant across descent levels: one trace per bucket,
+        not per (bucket, |SP|) pair.
+        """
+        base = np.zeros((self.k_bucket,), np.int32)
+        base[self._active] = 1
+        masks = np.repeat(base[None, :], self.k_bucket, axis=0)
+        np.fill_diagonal(masks, 0)
+        return masks
+
+    def sweep(self) -> tuple[np.ndarray, np.ndarray]:
+        _, jnp = _jax()
+        self._ensure_uploaded()
+        edges, amis = _bucket_sweep_fn(self.use_kernel)(
+            self._dev, self._valid, jnp.asarray(self._col_masks()),
+            self.am, self.k - 1, self.n_s)
+        act = np.asarray(self._active)
+        return np.asarray(edges)[act].astype(np.int64), \
+            np.asarray(amis)[act].astype(np.int64)
+
+
+class ShardedSweepWorkspace(DeviceSweepWorkspace):
+    """Device workspace with rows sharded over the mesh's DP axes.
+
+    With ``mesh=None`` this *is* the single-device bucketed sweep (same
+    jit cache, same bucket ladder).  On a real mesh each candidate's AMI
+    runs through the explicit ``ami_bucketed`` collective schedule; the
+    column-drop multiply happens under GSPMD with row sharding preserved,
+    so the buffer still uploads exactly once per descent.
+    """
+
+    def __init__(self, store, class_id, props, n_s, am, *, mesh=None,
+                 plan=None, use_kernel: bool = True) -> None:
+        self.mesh = mesh
+        self.plan = plan
+        self.dp_axes: tuple = ()
+        super().__init__(store, class_id, props, n_s, am,
+                         use_kernel=use_kernel)
+
+    def _placement(self, n_rows: int):
+        if self.mesh is None:
+            return 1, None
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.dist.sharding import batch_axes_for
+        if self.plan is not None:
+            # prefer the planner's rung for this (padded) row count
+            axes = tuple(batch_axes_for(self.plan, bucket_rows(n_rows))
+                         or self.plan.dp_axes)
+        else:
+            axes = tuple(a for a in self.mesh.axis_names if a != "model")
+        self.dp_axes = axes
+        row_multiple = int(np.prod(
+            [s for a, s in zip(self.mesh.axis_names,
+                               self.mesh.devices.shape) if a in axes],
+            initial=1))
+        return row_multiple, (NamedSharding(self.mesh, P(axes, None)),
+                              NamedSharding(self.mesh, P(axes)))
+
+    def sweep(self) -> tuple[np.ndarray, np.ndarray]:
+        if self.mesh is None:
+            return super().sweep()
+        _, jnp = _jax()
+        self._ensure_uploaded()      # also resolves dp_axes placement
+        fn = _sharded_ami_fn(self.mesh, self.dp_axes, self.use_kernel)
+        masks = self._col_masks()
+        k = self.k
+        amis = np.empty((k,), np.int64)
+        for j, col in enumerate(self._active):
+            amis[j] = int(fn(self._dev, self._valid,
+                             jnp.asarray(masks[col])))
+        edges = np.asarray([num_edges(int(a), self.am, k - 1, self.n_s)
+                            for a in amis], np.int64)
+        return edges, amis

@@ -7,6 +7,13 @@ the graph is a single ``(n, 3)`` COO array of ``(subject, property, object)``
 ids.  All downstream computation (multiplicity, AMI, #Edges, factorization)
 is vectorized over these arrays, which is also the layout we ship to device.
 
+Access paths are served by a lazily-built :class:`repro.core.index.GraphIndex`
+(per-predicate CSR slices over a (p, s, o)-sorted copy): class membership,
+class schema, object-matrix extraction and edge counting are index joins,
+not full-graph scans.  The index survives ``copy()`` and is *merged* --
+not rebuilt -- on ``add_ids``, so streaming appends (``Compactor.update``)
+never re-sort the whole graph.
+
 Two ids are reserved with well-known terms:
   * ``rdf:type``           -- the class-membership property (paper: "type")
   * ``repro:instanceOf``   -- the surrogate-link property added by
@@ -18,6 +25,9 @@ import dataclasses
 from typing import Iterable, Sequence
 
 import numpy as np
+
+from .index import (GraphIndex, SPO_PERM, in_sorted, merge_disjoint,
+                    setdiff_rows, sort_unique)
 
 RDF_TYPE = "rdf:type"
 INSTANCE_OF = "repro:instanceOf"
@@ -50,6 +60,10 @@ class TermDict:
         Algorithm 3 allocates one id per star pattern and dominates
         factorization setup time at scale (benchmarked in
         ``benchmarks/bench_savings.py``).
+
+        Returns int32, matching ``TripleStore.spo``: minted ids flow
+        straight into triple rows (``from_ids`` / ``add_ids``) and a wider
+        dtype would silently upcast every downstream concatenation.
         """
         index = self._index
         missing = dict.fromkeys(t for t in terms if t not in index)
@@ -57,7 +71,7 @@ class TermDict:
             base = len(self._terms)
             self._terms.extend(missing)
             index.update(zip(missing, range(base, base + len(missing))))
-        return np.fromiter((index[t] for t in terms), np.int64,
+        return np.fromiter((index[t] for t in terms), np.int32,
                            count=len(terms))
 
     def lookup(self, term: str) -> int | None:
@@ -87,18 +101,43 @@ class TripleStore:
 
     ``spo`` is an ``(n, 3)`` int32 array; row ``(s, p, o)`` is the RDF triple
     / labeled edge of Def. 4.1/4.2.  Duplicate triples are removed (an RDF
-    graph is a *set* of triples).
+    graph is a *set* of triples) and rows are kept sorted by (s, p, o) --
+    the invariant that lets appends merge instead of re-sort.
     """
 
     def __init__(self, dictionary: TermDict | None = None,
-                 spo: np.ndarray | None = None) -> None:
+                 spo: np.ndarray | None = None, *,
+                 presorted: bool = False) -> None:
+        self._index: GraphIndex | None = None
         self.dict = dictionary if dictionary is not None else TermDict()
         self.TYPE = self.dict.id(RDF_TYPE)
         self.INSTANCE_OF = self.dict.id(INSTANCE_OF)
         if spo is None:
             spo = np.empty((0, 3), dtype=np.int32)
-        self.spo = np.asarray(spo, dtype=np.int32).reshape(-1, 3)
-        self._dedup()
+        spo = np.asarray(spo, dtype=np.int32).reshape(-1, 3)
+        # ``presorted=True``: caller guarantees sorted-unique (s, p, o)
+        # rows (e.g. a row-subset of another store) -- skip the dedup sort
+        self._spo = spo if presorted else sort_unique(spo, SPO_PERM)
+
+    # -- storage invariants ------------------------------------------------
+    @property
+    def spo(self) -> np.ndarray:
+        return self._spo
+
+    @spo.setter
+    def spo(self, rows: np.ndarray) -> None:
+        # rebinding the triple array invalidates the index (callers that
+        # append should prefer ``add_ids``, which merges instead)
+        self._spo = sort_unique(np.asarray(rows, np.int32).reshape(-1, 3),
+                                SPO_PERM)
+        self._index = None
+
+    @property
+    def index(self) -> GraphIndex:
+        """The lazily-built per-predicate CSR index over ``spo``."""
+        if self._index is None:
+            self._index = GraphIndex(self._spo, self.TYPE, self.INSTANCE_OF)
+        return self._index
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -107,39 +146,53 @@ class TripleStore:
         d = store.dict
         rows = [(d.id(s), d.id(p), d.id(o)) for s, p, o in triples]
         store.spo = np.asarray(rows, dtype=np.int32).reshape(-1, 3)
-        store._dedup()
         return store
 
     @classmethod
-    def from_ids(cls, dictionary: TermDict, spo: np.ndarray) -> "TripleStore":
-        return cls(dictionary, spo)
+    def from_ids(cls, dictionary: TermDict, spo: np.ndarray, *,
+                 presorted: bool = False) -> "TripleStore":
+        return cls(dictionary, spo, presorted=presorted)
 
     def add_ids(self, rows: np.ndarray) -> None:
+        """Append triples, preserving the sorted-unique invariant by
+        *merging*: the incoming block is locally sorted/deduped, rows
+        already present are dropped with a binary-search pass, and the
+        disjoint remainder merges in O(n + m log n) -- no ``np.unique``
+        over the combined graph.  A live index is merged incrementally."""
         rows = np.asarray(rows, dtype=np.int32).reshape(-1, 3)
-        self.spo = np.concatenate([self.spo, rows], axis=0)
-        self._dedup()
-
-    def _dedup(self) -> None:
-        if len(self.spo):
-            self.spo = np.unique(self.spo, axis=0)
+        if rows.shape[0] == 0:
+            return
+        if self._spo.shape[0] == 0:
+            self._spo = sort_unique(rows, SPO_PERM)
+            self._index = None
+            return
+        fresh = setdiff_rows(sort_unique(rows, SPO_PERM), self._spo, SPO_PERM)
+        if fresh.shape[0] == 0:
+            return
+        self._spo = merge_disjoint(self._spo, fresh, SPO_PERM)
+        if self._index is not None:
+            self._index = self._index.merged(fresh)
 
     def restrict_subjects(self, subjects: np.ndarray) -> "TripleStore":
         """Subgraph of triples whose subject is in ``subjects`` (shared
         dictionary) -- the paper evaluates each observation type as its
-        own graph."""
-        mask = np.isin(self.spo[:, 0], np.asarray(subjects))
-        return TripleStore.from_ids(self.dict, self.spo[mask])
+        own graph.  A row-subset of a sorted-unique array stays
+        sorted-unique, so the result skips the dedup pass entirely."""
+        subjects = np.unique(np.asarray(subjects).ravel())
+        mask = in_sorted(self._spo[:, 0], subjects)
+        return TripleStore.from_ids(self.dict, self._spo[mask],
+                                    presorted=True)
 
     # -- size metrics (paper §5, "Metrics") --------------------------------
     @property
     def n_triples(self) -> int:
-        return int(self.spo.shape[0])
+        return int(self._spo.shape[0])
 
     def nodes(self) -> np.ndarray:
         """Distinct entity/object nodes (NN numerator)."""
-        if not len(self.spo):
+        if not len(self._spo):
             return np.empty((0,), np.int32)
-        return np.unique(np.concatenate([self.spo[:, 0], self.spo[:, 2]]))
+        return np.unique(np.concatenate([self._spo[:, 0], self._spo[:, 2]]))
 
     @property
     def n_nodes(self) -> int:
@@ -152,19 +205,15 @@ class TripleStore:
 
     # -- class / schema access ---------------------------------------------
     def entities_of_class(self, class_id: int) -> np.ndarray:
-        mask = (self.spo[:, 1] == self.TYPE) & (self.spo[:, 2] == class_id)
-        return np.unique(self.spo[mask, 0])
+        return self.index.entities_of_class(int(class_id))
 
     def classes(self) -> np.ndarray:
-        return np.unique(self.spo[self.spo[:, 1] == self.TYPE, 2])
+        return self.index.classes()
 
     def class_properties(self, class_id: int) -> np.ndarray:
         """Sorted property ids whose domain includes class C (excl. type &
         instanceOf)."""
-        ents = self.entities_of_class(class_id)
-        mask = np.isin(self.spo[:, 0], ents)
-        props = np.unique(self.spo[mask, 1])
-        return props[(props != self.TYPE) & (props != self.INSTANCE_OF)]
+        return self.index.class_properties(int(class_id))
 
     def class_stats(self, class_id: int) -> ClassStats:
         ents = self.entities_of_class(class_id)
@@ -182,53 +231,27 @@ class TripleStore:
         and properties are *functional* (one value each) -- assumption (a)/(b)
         of §4.3.  We validate: entities violating either assumption are
         excluded from the candidate set (``strict=True`` raises instead).
+        Served by per-predicate index joins (see ``core.index``).
         """
-        props = np.asarray(list(props), dtype=np.int32)
-        ents = self.entities_of_class(class_id)
-        if ents.size == 0 or props.size == 0:
-            return ents[:0], np.empty((0, props.size), np.int32)
-        # edges whose subject is an instance of C and property in props
-        sel = np.isin(self.spo[:, 0], ents) & np.isin(self.spo[:, 1], props)
-        s, p, o = self.spo[sel].T
-        ent_idx = np.searchsorted(ents, s)
-        order = np.argsort(props, kind="stable")     # props may be unsorted
-        prop_pos = order[np.searchsorted(props[order], p)]
-        # count (entity, property) pairs to detect non-functional properties
-        flat = ent_idx.astype(np.int64) * props.size + prop_pos
-        objmat = np.full((ents.size, props.size), -1, dtype=np.int32)
-        counts = np.bincount(flat, minlength=ents.size * props.size)
-        ok_pairs = counts.reshape(ents.size, props.size) == 1
-        complete = ok_pairs.all(axis=1)
-        if strict and not complete.all():
-            bad = ents[~complete]
-            raise ValueError(
-                f"{bad.size} entities of class {class_id} violate the "
-                "complete-molecule/functional-property assumption")
-        objmat[ent_idx, prop_pos] = o
-        return ents[complete], objmat[complete]
+        return self.index.object_matrix(int(class_id), props, strict=strict)
 
     def labeled_edge_count(self, class_id: int,
                            props: Sequence[int] | None = None) -> int:
         """NLE: labeled edges annotated with class properties (paper §5)."""
-        ents = self.entities_of_class(class_id)
-        mask = np.isin(self.spo[:, 0], ents)
-        if props is not None:
-            mask &= np.isin(self.spo[:, 1], np.asarray(list(props), np.int32))
-        else:
-            mask &= self.spo[:, 1] != self.TYPE
-        return int(mask.sum())
+        return self.index.labeled_edge_count(int(class_id), props)
 
     # -- convenience ---------------------------------------------------------
     def triples_as_terms(self) -> list[tuple[str, str, str]]:
         t = self.dict.term
-        return [(t(s), t(p), t(o)) for s, p, o in self.spo.tolist()]
+        return [(t(s), t(p), t(o)) for s, p, o in self._spo.tolist()]
 
     def copy(self) -> "TripleStore":
         new = TripleStore.__new__(TripleStore)
         new.dict = self.dict          # term dict is shared (append-only)
         new.TYPE = self.TYPE
         new.INSTANCE_OF = self.INSTANCE_OF
-        new.spo = self.spo.copy()
+        new._spo = self._spo.copy()
+        new._index = self._index      # immutable: valid for equal rows
         return new
 
     def __repr__(self) -> str:  # pragma: no cover

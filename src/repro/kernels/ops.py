@@ -26,13 +26,30 @@ def _interpret() -> bool:
 
 # -- FSP group-by -----------------------------------------------------------
 
-def row_signature(mat, use_kernel: bool = True):
-    """(N, K) int -> (N, 2) uint32 signature lanes (hi, lo)."""
+# all-ones signature reserved for masked-out rows: every invalid row
+# collapses into one sentinel segment the callers subtract back out
+SIG_SENTINEL = 0xFFFFFFFF
+
+
+def row_signature(mat, valid=None, use_kernel: bool = True):
+    """(N, K) int -> (N, 2) uint32 signature lanes (hi, lo).
+
+    ``valid``: optional (N,) bool mask; rows with ``valid == False``
+    (bucket/shard padding) receive the reserved sentinel signature so
+    group-by consumers can discount them with one segment subtraction.
+    Masking happens here -- at the op boundary -- so every caller
+    (single-device AMI, the bucketed sweep, the shard_map collective
+    schedule) shares one sentinel convention instead of hand-rolling it.
+    """
     if mat.ndim != 2:
         raise ValueError(f"expected (N, K) matrix, got {mat.shape}")
     if use_kernel:
-        return _sig_hash(mat, interpret=_interpret())
-    return ref.row_signature_ref(mat)
+        sig = _sig_hash(mat, interpret=_interpret())
+    else:
+        sig = ref.row_signature_ref(mat)
+    if valid is not None:
+        sig = jnp.where(valid[:, None], sig, jnp.uint32(SIG_SENTINEL))
+    return sig
 
 
 def seg_boundaries(sig_sorted, use_kernel: bool = True):

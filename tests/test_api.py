@@ -375,6 +375,42 @@ def test_deprecated_wrappers_warn_and_agree():
     assert f.n_triples_after < f.n_triples_before
 
 
+def test_deprecated_shims_identical_to_compactor_path():
+    """The core.gfsp/efsp/factorize free functions must warn AND return
+    results identical to the Compactor pipeline they shim over."""
+    from repro.core import efsp as efsp_fn, factorize as fact_fn, \
+        gfsp as gfsp_fn
+    store = _sensor(250, seed=19)
+    cid = store.dict.lookup("ssn:Observation")
+
+    ref = Compactor(detector="gfsp", backend="host").detect(store, cid)
+    with pytest.warns(DeprecationWarning):
+        old = gfsp_fn(store, cid)
+    assert (old.props, old.edges, old.ami, old.am, old.iterations,
+            old.evaluations) == (ref.props, ref.edges, ref.ami, ref.am,
+                                 ref.iterations, ref.evaluations)
+
+    pytest.importorskip("jax")
+    dev_ref = Compactor(detector="gfsp", backend="device").detect(store, cid)
+    with pytest.warns(DeprecationWarning):
+        dev_old = gfsp_fn(store, cid, device_sweep=True)
+    assert (dev_old.props, dev_old.edges, dev_old.evaluations) == \
+        (dev_ref.props, dev_ref.edges, dev_ref.evaluations)
+
+    e_ref = Compactor(detector="efsp").detect(store, cid)
+    with pytest.warns(DeprecationWarning):
+        e_old = efsp_fn(store, cid)
+    assert (e_old.props, e_old.edges, e_old.ami) == \
+        (e_ref.props, e_ref.edges, e_ref.ami)
+
+    f_ref = Compactor().execute(
+        store, CompactionPlan.explicit([(cid, ref.props)]))
+    with pytest.warns(DeprecationWarning):
+        f_old = fact_fn(store, cid, ref.props)
+    assert f_old.n_triples_after == f_ref.n_triples_after
+    np.testing.assert_array_equal(f_old.graph.spo, f_ref.graph.spo)
+
+
 def test_termdict_ids_bulk_matches_sequential():
     seq, bulk = TermDict(), TermDict()
     terms = [f"t/{i}" for i in range(50)]

@@ -1,0 +1,213 @@
+"""GraphIndex substrate: index joins == full-graph scans, merge-on-append,
+dedup skipping on provably-sorted paths, and the TermDict dtype contract."""
+import numpy as np
+import pytest
+
+from repro.core import triples as triples_mod
+from repro.core.index import (GraphIndex, PSO_PERM, SPO_PERM, in_sorted,
+                              merge_disjoint, setdiff_rows, sort_unique)
+from repro.core.triples import TermDict, TripleStore
+from repro.data.synthetic import SensorGraphSpec, generate
+
+
+def _random_store(seed=0, n=250):
+    return generate(SensorGraphSpec(n_observations=n, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# index joins reproduce the seed's scan semantics exactly
+# ---------------------------------------------------------------------------
+
+def _scan_entities(store, c):
+    spo = store.spo
+    m = (spo[:, 1] == store.TYPE) & (spo[:, 2] == c)
+    return np.unique(spo[m, 0])
+
+
+def test_index_matches_scans_on_sensor_graph():
+    store = _random_store(seed=7)
+    spo = store.spo
+    for c in store.classes().tolist():
+        ents = _scan_entities(store, c)
+        np.testing.assert_array_equal(store.entities_of_class(c), ents)
+        m = np.isin(spo[:, 0], ents)
+        props = np.unique(spo[m, 1])
+        props = props[(props != store.TYPE) & (props != store.INSTANCE_OF)]
+        np.testing.assert_array_equal(store.class_properties(c), props)
+        assert store.labeled_edge_count(c) == \
+            int((m & (spo[:, 1] != store.TYPE)).sum())
+        assert store.labeled_edge_count(c, props[:2]) == \
+            int((m & np.isin(spo[:, 1], props[:2])).sum())
+
+
+def test_object_matrix_join_excludes_incomplete_and_nonfunctional():
+    t = [("c1", "rdf:type", "C"), ("c1", "p1", "e1"), ("c1", "p2", "e2"),
+         ("c2", "rdf:type", "C"), ("c2", "p1", "e1"),            # misses p2
+         ("c3", "rdf:type", "C"), ("c3", "p1", "a"), ("c3", "p1", "b"),
+         ("c3", "p2", "e2")]                                     # p1 x2
+    store = TripleStore.from_triples(t)
+    C = store.dict.lookup("C")
+    p1, p2 = store.dict.lookup("p1"), store.dict.lookup("p2")
+    ents, objmat = store.object_matrix(C, [p1, p2])
+    assert ents.tolist() == [store.dict.lookup("c1")]
+    assert objmat.tolist() == [[store.dict.lookup("e1"),
+                                store.dict.lookup("e2")]]
+    with pytest.raises(ValueError, match="violate"):
+        store.object_matrix(C, [p1, p2], strict=True)
+    # unsorted property order is preserved column-wise
+    ents2, objmat2 = store.object_matrix(C, [p2, p1])
+    np.testing.assert_array_equal(objmat2[:, ::-1], objmat)
+
+
+def test_pred_slice_is_sorted_vertical_partition():
+    store = _random_store(seed=3, n=100)
+    idx = store.index
+    total = 0
+    for p in idx.preds.tolist():
+        sl = idx.pred_slice(p)
+        total += sl.shape[0]
+        assert (sl[:, 1] == p).all()
+        key = sl[:, 0].astype(np.int64) << 32 | sl[:, 2]
+        assert (np.diff(key) > 0).all()      # strictly (s, o)-sorted
+    assert total == store.n_triples
+    assert idx.pred_slice(10**6).shape[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# merge primitives + merge-on-append
+# ---------------------------------------------------------------------------
+
+def test_merge_primitives_roundtrip():
+    rng = np.random.default_rng(0)
+    old = sort_unique(rng.integers(0, 40, (300, 3)).astype(np.int32))
+    new = rng.integers(0, 40, (120, 3)).astype(np.int32)
+    fresh = setdiff_rows(sort_unique(new), old)
+    merged = merge_disjoint(old, fresh)
+    expect = np.unique(np.concatenate([old, new]), axis=0)
+    np.testing.assert_array_equal(merged, expect)
+    # PSO order variant used by the index
+    old_p = sort_unique(old, PSO_PERM)
+    merged_p = merge_disjoint(old_p, setdiff_rows(
+        sort_unique(new, PSO_PERM), old_p, PSO_PERM), PSO_PERM)
+    assert merged_p.shape == expect.shape
+
+
+def test_add_ids_merges_index_and_matches_rebuild():
+    store = _random_store(seed=11, n=150)
+    _ = store.index                      # force build, then merge into it
+    rng = np.random.default_rng(1)
+    extra = rng.integers(0, 400, (500, 3)).astype(np.int32)
+    expect = np.unique(np.concatenate([store.spo, extra]), axis=0)
+    store.add_ids(extra)
+    np.testing.assert_array_equal(store.spo, expect)
+    # the merged index answers like a fresh one
+    fresh = GraphIndex(store.spo, store.TYPE, store.INSTANCE_OF)
+    for c in store.classes().tolist():
+        np.testing.assert_array_equal(store.entities_of_class(c),
+                                      fresh.entities_of_class(c))
+        np.testing.assert_array_equal(store.class_properties(c),
+                                      fresh.class_properties(c))
+    np.testing.assert_array_equal(store.index.rows, fresh.rows)
+
+
+def test_merged_index_cache_carryover_is_safe():
+    store = _random_store(seed=13, n=120)
+    classes = store.classes().tolist()
+    for c in classes:                    # warm every cache
+        store.entities_of_class(c)
+        store.class_properties(c)
+    c0 = classes[0]
+    ent0 = int(store.entities_of_class(c0)[0])
+    # append a new property edge on an entity of c0 AND a new member
+    newp = store.dict.id("p/appended")
+    newe = store.dict.id("ent/appended")
+    store.add_ids(np.array([[ent0, newp, ent0],
+                            [newe, store.TYPE, c0]], np.int32))
+    assert newp in store.class_properties(c0).tolist()
+    assert newe in store.entities_of_class(c0).tolist()
+
+
+def test_copy_shares_index_and_diverges_on_append():
+    store = _random_store(seed=2, n=80)
+    _ = store.index
+    clone = store.copy()
+    assert clone._index is store._index
+    clone.add_ids(np.array([[5, store.TYPE, 7]], np.int32))
+    assert clone._index is not store._index
+    assert store.n_triples == clone.n_triples - 1
+
+
+# ---------------------------------------------------------------------------
+# dedup skipping (satellite): provably-sorted paths never re-dedup
+# ---------------------------------------------------------------------------
+
+def test_restrict_subjects_skips_dedup_and_matches_isin(monkeypatch):
+    store = _random_store(seed=5, n=100)
+    subs = store.entities_of_class(store.classes()[0].item())
+    expect = store.spo[np.isin(store.spo[:, 0], subs)]
+
+    calls = []
+    orig = triples_mod.sort_unique
+
+    def counting(rows, perm=SPO_PERM):
+        calls.append(rows.shape[0])
+        return orig(rows, perm)
+
+    monkeypatch.setattr(triples_mod, "sort_unique", counting)
+    sub = store.restrict_subjects(subs)
+    np.testing.assert_array_equal(sub.spo, expect)
+    assert calls == []                   # presorted slice: no dedup pass
+
+
+def test_add_ids_dedups_only_the_appended_block(monkeypatch):
+    store = _random_store(seed=6, n=100)
+    n_before = store.n_triples
+    rows = np.concatenate([store.spo[:10],                 # duplicates
+                           np.array([[9, 9, 9]], np.int32)])
+    calls = []
+    orig = triples_mod.sort_unique
+
+    def counting(r, perm=SPO_PERM):
+        calls.append(r.shape[0])
+        return orig(r, perm)
+
+    monkeypatch.setattr(triples_mod, "sort_unique", counting)
+    store.add_ids(rows)
+    assert store.n_triples == n_before + 1
+    assert calls and max(calls) == rows.shape[0]   # never the full graph
+
+
+# ---------------------------------------------------------------------------
+# TermDict dtype contract (satellite): minted ids match spo's int32
+# ---------------------------------------------------------------------------
+
+def test_termdict_ids_dtype_matches_spo():
+    d = TermDict()
+    got = d.ids([f"t/{i}" for i in range(10)])
+    assert got.dtype == np.int32
+    store = TripleStore()
+    assert store.spo.dtype == got.dtype
+
+
+def test_surrogate_minting_roundtrip_through_from_ids():
+    """Regression: TermDict.ids used to return int64 while spo is int32 --
+    minted surrogate rows silently upcast every concatenation.  The bulk-
+    minted block must flow into from_ids/add_ids without casts and
+    round-trip by name."""
+    store = _random_store(seed=1, n=50)
+    d = store.dict
+    names = [f"repro:sg/test/{i}" for i in range(7)]
+    sgs = d.ids(names)
+    assert sgs.dtype == store.spo.dtype == np.int32
+    c0 = int(store.classes()[0])
+    rows = np.stack([sgs, np.full(7, store.TYPE, np.int32),
+                     np.full(7, c0, np.int32)], axis=1)
+    assert rows.dtype == np.int32        # no silent upcast in the stack
+    g = TripleStore.from_ids(d, np.concatenate([store.spo, rows]))
+    ents = g.entities_of_class(c0)
+    assert np.isin(sgs, ents).all()
+    assert [g.dict.term(int(s)) for s in sgs] == names
+    # second mint of the same names is a pure lookup, same ids, same dtype
+    again = d.ids(names)
+    assert again.dtype == np.int32
+    np.testing.assert_array_equal(again, sgs)

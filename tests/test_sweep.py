@@ -1,0 +1,165 @@
+"""Shape-bucketed sweep workspaces: backend parity from one parent
+buffer, bounded jit tracing, and mask-aware signature ops."""
+import numpy as np
+import pytest
+
+from repro.api import Compactor, get_backend
+from repro.core import sweep as core_sweep
+from repro.core.star import ami, num_edges
+from repro.core.sweep import (BUCKET_MIN_COLS, BUCKET_MIN_ROWS,
+                              DeviceSweepWorkspace, HostSweepWorkspace,
+                              SweepWorkspace, bucket_cols, bucket_rows)
+from repro.core.triples import TripleStore
+from repro.data.synthetic import SensorGraphSpec, generate
+
+jax = pytest.importorskip("jax")
+
+
+def _sensor(n=300, seed=3, **kw):
+    return generate(SensorGraphSpec(n_observations=n, seed=seed, **kw))
+
+
+# ---------------------------------------------------------------------------
+# bucket ladder
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder():
+    assert bucket_rows(0) == BUCKET_MIN_ROWS
+    assert bucket_rows(64) == 64
+    assert bucket_rows(65) == 128
+    assert bucket_rows(800) == 1024
+    assert bucket_rows(100, multiple=3) == 129       # pow2 then dp-rounded
+    assert bucket_cols(1) == BUCKET_MIN_COLS
+    assert bucket_cols(5) == 8
+    assert bucket_cols(8) == 8
+
+
+# ---------------------------------------------------------------------------
+# workspace semantics: slices of ONE parent matrix on every backend
+# ---------------------------------------------------------------------------
+
+def _workspace_for(backend_name, store, cid):
+    be = get_backend(backend_name)
+    stats = store.class_stats(cid)
+    props = tuple(int(p) for p in stats.properties)
+    n_s, am = len(props), stats.n_instances
+    return be.workspace(store, cid, props, n_s, am), n_s, am
+
+
+@pytest.mark.parametrize("backend", ["host", "device", "sharded"])
+def test_workspace_sweep_matches_parent_matrix_formula(backend):
+    store = _sensor(200, seed=9)
+    cid = int(store.dict.lookup("ssn:Observation"))
+    ws, n_s, am = _workspace_for(backend, store, cid)
+    assert isinstance(ws, SweepWorkspace)
+    cur = ws.evaluate_current()
+    assert cur.props == ws.props
+    mat = ws.matrix
+    edges, amis = ws.sweep()
+    assert edges.shape == amis.shape == (len(cur.props),)
+    for j in range(len(cur.props)):
+        sub = np.delete(mat, j, axis=1)
+        a = ami(sub)
+        assert int(amis[j]) == a, (backend, j)
+        assert int(edges[j]) == num_edges(a, am, n_s - 1, n_s)
+
+
+@pytest.mark.parametrize("backend", ["device", "sharded"])
+def test_workspace_descend_drops_on_device_no_reextraction(backend):
+    store = _sensor(150, seed=4)
+    cid = int(store.dict.lookup("ssn:Observation"))
+    ws, n_s, am = _workspace_for(backend, store, cid)
+    assert ws._dev is None        # upload is lazy: first sweep pays it
+    edges, amis = ws.sweep()
+    buf_before = ws._dev          # uploaded parent buffer
+    assert buf_before is not None
+    j = int(np.argmin(edges))
+    dropped = ws.props[j]
+    ws.descend(j)
+    assert dropped not in ws.props and len(ws.props) == n_s - 1
+    assert ws._dev is buf_before  # same device buffer: no re-upload
+    # post-descent sweep still agrees with host arithmetic on the view
+    edges2, amis2 = ws.sweep()
+    active = [i for i, p in enumerate(ws._all_props) if p in ws.props]
+    for jj in range(len(ws.props)):
+        cols = active[:jj] + active[jj + 1:]
+        assert int(amis2[jj]) == ami(ws.matrix[:, cols])
+
+
+def test_all_backends_share_one_entity_universe():
+    """Incomplete molecules: every backend sweeps the same parent matrix
+    (entities complete over the FULL property set S) -- the seed's host
+    loop re-decided the universe per subset, devices did not."""
+    t = []
+    for i in range(6):
+        e = f"e{i}"
+        t += [(e, "rdf:type", "C"), (e, "a", "x"), (e, "b", f"y{i % 2}")]
+    t += [("partial", "rdf:type", "C"), ("partial", "a", "x")]  # misses b
+    store = TripleStore.from_triples(t)
+    C = int(store.dict.lookup("C"))
+    results = {}
+    for be in ("host", "device", "sharded"):
+        r = Compactor(detector="gfsp", backend=be).detect(store, C)
+        results[be] = (tuple(sorted(r.props)), r.edges, r.ami,
+                       r.evaluations)
+    assert len(set(results.values())) == 1, results
+
+
+# ---------------------------------------------------------------------------
+# bounded tracing: one compile per bucket shape, cache-hit afterwards
+# ---------------------------------------------------------------------------
+
+def test_trace_count_bounded_by_distinct_bucket_shapes():
+    """A multi-class gfsp run (two classes, several descent levels each,
+    then a REPEAT run and a second same-bucket graph) must trace the
+    sweep once per distinct bucket shape -- not once per (class, descent
+    level, instance) triple."""
+    core_sweep.clear_compile_cache()     # deterministic cold start
+    store = _sensor(300, seed=21)
+    comp = Compactor(detector="gfsp", backend="device")
+    rep = comp.run(store)
+    assert len(rep.plan) == 2            # Observation + Measurement
+    first = core_sweep.trace_count()
+    assert first == core_sweep.distinct_bucket_shapes()
+    assert 0 < first <= 2                # <= one bucket per class
+    # warm: same graph, fresh Compactor -- zero new traces
+    Compactor(detector="gfsp", backend="device").run(store)
+    assert core_sweep.trace_count() == first
+    # a different graph landing in the same buckets is also free
+    Compactor(detector="gfsp", backend="device").run(_sensor(280, seed=5))
+    assert core_sweep.trace_count() == first
+    # mesh-less sharded shares the single-device bucket cache
+    Compactor(detector="gfsp", backend="sharded").run(store)
+    assert core_sweep.trace_count() == first
+    # a graph in a NEW row bucket traces exactly the new shapes
+    Compactor(detector="gfsp", backend="device").run(_sensor(700, seed=8))
+    after = core_sweep.trace_count()
+    assert after == core_sweep.distinct_bucket_shapes() > first
+
+
+# ---------------------------------------------------------------------------
+# mask-aware signature op
+# ---------------------------------------------------------------------------
+
+def test_row_signature_valid_mask_sentinel():
+    import jax.numpy as jnp
+    from repro.kernels import ops as kops
+    rng = np.random.default_rng(0)
+    mat = jnp.asarray(rng.integers(0, 50, (16, 4)).astype(np.int32))
+    valid = jnp.asarray(np.arange(16) < 11)
+    sig = np.asarray(kops.row_signature(mat, valid=valid, use_kernel=False))
+    ref = np.asarray(kops.row_signature(mat, use_kernel=False))
+    np.testing.assert_array_equal(sig[:11], ref[:11])
+    assert (sig[11:] == kops.SIG_SENTINEL).all()
+
+
+def test_ami_device_masked_equals_host_on_valid_rows():
+    import jax.numpy as jnp
+    from repro.core.star import ami_device
+    rng = np.random.default_rng(7)
+    mat = rng.integers(0, 4, (40, 3)).astype(np.int32)
+    padded = np.concatenate([mat, np.zeros((24, 3), np.int32)])
+    valid = np.arange(64) < 40
+    got = int(ami_device(jnp.asarray(padded), valid=jnp.asarray(valid),
+                         use_kernel=False))
+    assert got == ami(mat)
