@@ -4,13 +4,20 @@ Asserts the structural invariants the bench-smoke job exists to protect:
 
 1. **Cross-backend parity** -- every detector x backend cell reports the
    same per-class #Edges and the same triple savings (all cells compact
-   to the identical graph).
+   to the identical graph).  efsp <-> gfsp parity on the classes both
+   detect is additionally checked class-by-class: the exhaustive and
+   greedy detectors must agree exactly (paper Theorem 4.1 claim).
 2. **Warm accelerator speed** -- once the shape-bucketed sweep is
    compiled, the device backend's detection time must stay within
    ``MAX_WARM_RATIO`` x the host loop on the 800-observation snapshot
-   graph (the seed regression this guards against was ~95x).
+   graph (the seed regression this guards against was ~95x), and the
+   level-batched efsp cells must stay within ``MAX_EFSP_WARM_RATIO`` x
+   the gfsp host loop (the gSpan-backed efsp was ~270x).
 3. **Bounded retracing** -- warm passes of the jax backends must be pure
    jit-cache hits (``trace_count_warm == 0``).
+4. **One lowering per descent** -- on the candidate-batched device and
+   sharded paths every warm logical sweep (greedy descent step or efsp
+   lattice level) must dispatch exactly one compiled lowering.
 
     python -m benchmarks.check_snapshot [path/to/BENCH_fsp.json]
 """
@@ -21,8 +28,17 @@ import os
 import sys
 
 MAX_WARM_RATIO = 3.0
+MAX_EFSP_WARM_RATIO = 50.0
 # wall clocks on shared CI runners jitter; forgive sub-millisecond hosts
 MIN_HOST_MS = 1.0
+
+# cells whose sweeps run through the candidate-batched compiled engine.
+# The == 1.0 lowerings-per-descent bound is EXACT for these cells on the
+# pinned snapshot graph: efsp slices lattice levels to engine-sized
+# chunks at the detector, gfsp drop-one stacks are k_bucket <= 256, and
+# every sensor class executes at least one sweep (so descents > 0).
+BATCHED_CELLS = (("gfsp", "device"), ("gfsp", "sharded"),
+                 ("efsp", "device"), ("efsp", "sharded"))
 
 DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_fsp.json")
@@ -56,11 +72,46 @@ def check(path: str = DEFAULT_PATH) -> list[str]:
             errors.append(
                 f"warm device detect {warm_ms:.1f} ms exceeds "
                 f"{MAX_WARM_RATIO}x host {host_ms:.1f} ms")
-    for key in (("gfsp", "device"), ("gfsp", "sharded")):
+
+    # efsp <-> gfsp agreement on the shared classes, class by class
+    efsp_host = by_key.get(("efsp", "host"))
+    if host and efsp_host:
+        shared = set(host["edges"]) & set(efsp_host["edges"])
+        if not shared:
+            errors.append("efsp and gfsp detected no common class")
+        for cls in sorted(shared):
+            if efsp_host["edges"][cls] != host["edges"][cls]:
+                errors.append(
+                    f"efsp/gfsp edge parity broken on {cls}: "
+                    f"{efsp_host['edges'][cls]} != {host['edges'][cls]}")
+        if efsp_host["pct_savings_triples"] != host["pct_savings_triples"]:
+            errors.append(
+                f"efsp/gfsp savings parity broken: "
+                f"{efsp_host['pct_savings_triples']} != "
+                f"{host['pct_savings_triples']}")
+        host_ms = max(host["detect_time_ms"], MIN_HOST_MS)
+        for be in ("host", "device", "sharded"):
+            cell = by_key.get(("efsp", be))
+            if not cell:
+                continue
+            warm_ms = cell["detect_time_ms_warm"]
+            if warm_ms > MAX_EFSP_WARM_RATIO * host_ms:
+                errors.append(
+                    f"warm efsp x {be} detect {warm_ms:.1f} ms exceeds "
+                    f"{MAX_EFSP_WARM_RATIO}x gfsp host {host_ms:.1f} ms")
+
+    for key in BATCHED_CELLS:
         cell = by_key.get(key)
-        if cell and cell.get("trace_count_warm", 0) != 0:
+        if not cell:
+            continue
+        if cell.get("trace_count_warm", 0) != 0:
             errors.append(f"{key[0]}x{key[1]} retraced on the warm pass "
                           f"({cell['trace_count_warm']} traces)")
+        lpd = cell.get("lowerings_per_descent_warm")
+        if lpd != 1.0:
+            errors.append(
+                f"{key[0]}x{key[1]} warm lowerings_per_descent is {lpd!r}, "
+                f"expected exactly 1.0 (candidate batching regressed)")
     return errors
 
 

@@ -15,10 +15,12 @@ import time
 SNAPSHOT_PATH = os.path.join(os.path.dirname(__file__), "..",
                              "BENCH_fsp.json")
 
-# detector x backend cells of the unified pipeline; efsp / gspan consume
-# pre-counted pattern multiplicities, so only their host cell is distinct
+# detector x backend cells of the unified pipeline; efsp is now
+# backend-parametric (level-batched through the sweep engine); gspan is
+# the honest enumeration baseline and stays host-only
 SNAPSHOT_CELLS = [("gfsp", "host"), ("gfsp", "device"), ("gfsp", "sharded"),
-                  ("efsp", "host"), ("gspan", "host")]
+                  ("efsp", "host"), ("efsp", "device"), ("efsp", "sharded"),
+                  ("gspan", "host")]
 
 
 def snapshot(fast: bool = True) -> dict:
@@ -28,8 +30,12 @@ def snapshot(fast: bool = True) -> dict:
     tracing for the shape-bucketed sweep (one trace per power-of-two
     bucket -- recorded as ``trace_count_cold``), the warm pass must be
     pure cache hits (``trace_count_warm`` is asserted 0 for the jax
-    backends by ``benchmarks.check_snapshot``).  Written to
-    BENCH_fsp.json so the bench trajectory is tracked in CI."""
+    backends by ``benchmarks.check_snapshot``).  Trace/exec counters
+    reset between cells, so every count is per-cell (the jit cache
+    itself is NOT dropped: later cells legitimately reuse earlier
+    buckets); ``lowerings_per_descent`` must be exactly 1 on the
+    batched paths.  Written to BENCH_fsp.json so the bench trajectory is
+    tracked in CI."""
     from repro.api import Compactor
     from repro.core import sweep as core_sweep
     from repro.data.synthetic import SensorGraphSpec, generate
@@ -38,21 +44,32 @@ def snapshot(fast: bool = True) -> dict:
     store = generate(SensorGraphSpec(n_observations=n_obs, seed=42))
     cells = []
     reference = None
-    core_sweep.reset_trace_stats()
+    bucket_shapes: dict[tuple, int] = {}
+
+    def _lpd(lowerings: int, descents: int) -> float:
+        return round(lowerings / descents, 4) if descents else 0.0
+
     for det, be in SNAPSHOT_CELLS:
         comp = Compactor(detector=det, backend=be)
-        traces0 = core_sweep.trace_count()
+        core_sweep.reset_trace_stats()     # per-cell counters, shared cache
         t0 = time.perf_counter()
         rep = comp.run(store)
         cold_ms = (time.perf_counter() - t0) * 1e3
         cold_detect = sum(d.exec_time_ms for d in rep.detections.values())
-        traces_cold = core_sweep.trace_count() - traces0
+        traces_cold = core_sweep.trace_count()
+        exec_cold = dict(core_sweep.EXEC_STATS)
         t0 = time.perf_counter()
         rep_warm = comp.run(store)
         warm_ms = (time.perf_counter() - t0) * 1e3
         warm_detect = sum(d.exec_time_ms
                           for d in rep_warm.detections.values())
-        traces_warm = core_sweep.trace_count() - traces0 - traces_cold
+        traces_warm = core_sweep.trace_count() - traces_cold
+        warm_lowerings = core_sweep.EXEC_STATS["lowerings"] \
+            - exec_cold["lowerings"]
+        warm_descents = core_sweep.EXEC_STATS["descents"] \
+            - exec_cold["descents"]
+        for k, v in core_sweep.TRACE_COUNTS.items():
+            bucket_shapes[k] = bucket_shapes.get(k, 0) + v
         dets = rep.detections
         cell = {
             "detector": det, "backend": be,
@@ -62,6 +79,10 @@ def snapshot(fast: bool = True) -> dict:
             "detect_time_ms_warm": round(warm_detect, 2),
             "trace_count_cold": traces_cold,
             "trace_count_warm": traces_warm,
+            "lowerings_per_descent": _lpd(exec_cold["lowerings"],
+                                          exec_cold["descents"]),
+            "lowerings_per_descent_warm": _lpd(warm_lowerings,
+                                               warm_descents),
             "evaluations": int(sum(d.evaluations for d in dets.values())),
             "n_classes": len(rep.plan),
             "edges": {store.dict.term(c): d.edges for c, d in dets.items()},
@@ -79,7 +100,7 @@ def snapshot(fast: bool = True) -> dict:
                   "n_nodes": store.n_nodes, "seed": 42},
         "bucket_shapes": {
             "/".join(str(x) for x in k): v
-            for k, v in sorted(core_sweep.TRACE_COUNTS.items())},
+            for k, v in sorted(bucket_shapes.items())},
         "cells": cells,
     }
     with open(SNAPSHOT_PATH, "w") as f:
@@ -91,6 +112,7 @@ def snapshot(fast: bool = True) -> dict:
               f"cold {c['exec_time_ms']:9.1f} ms  "
               f"warm {c['exec_time_ms_warm']:8.1f} ms  "
               f"traces={c['trace_count_cold']}/{c['trace_count_warm']}  "
+              f"low/desc={c['lowerings_per_descent_warm']:.1f}  "
               f"evals={c['evaluations']:<6d} "
               f"savings={c['pct_savings_triples']:.2f}%")
     return out

@@ -9,10 +9,13 @@ A backend owns the execution substrate behind two methods:
 * ``workspace(store, class_id, props, n_s, am)`` -- a per-(class, descent)
   :class:`repro.core.sweep.SweepWorkspace`: the object matrix is
   extracted through the ``GraphIndex`` joins ONCE, device backends upload
-  it ONCE, and every greedy descent step serves its drop-one sweep from
-  that parent buffer (host backends slice it; device backends mask
+  it ONCE, and every candidate batch -- a greedy drop-one sweep or a
+  whole E.FSP lattice level fed to ``sweep_candidates`` -- is served
+  from that parent buffer (host backends slice it; device backends mask
   columns on device inside a shape-bucketed jitted sweep that compiles
-  once per power-of-two bucket).
+  once per power-of-two ``(n_b, k_b, c_b)`` bucket and dispatches ONE
+  lowering per batch, sharded backends one ``shard_map`` collective
+  schedule per batch).
 
 The greedy loop itself (``GreedyDetector``) charges the SAME evaluation
 count for the same sweep on every backend -- ``len(SP)`` when the sweep
@@ -98,9 +101,10 @@ class ShardedBackend:
     ``mesh=None`` this degrades to the single-device bucketed sweep
     (useful for tests, and it shares the device jit cache).
 
-    On a real mesh each candidate's AMI runs through
-    ``core.distributed.ami_bucketed`` -- the explicit shard_map
-    (hash-bucket all_to_all + psum) path.  The implicit GSPMD lowering of
+    On a real mesh the WHOLE candidate stack of a sweep runs through
+    ``core.distributed.ami_bucketed_batch`` -- the explicit shard_map
+    (hash-bucket all_to_all + psum) path with a leading candidate axis,
+    one lowering per descent.  The implicit GSPMD lowering of
     the sort-based sweep silently miscounts distinct rows on multi-axis
     meshes under jax 0.4.x (per-shard segment counts get summed across
     replicas -- a latent seed bug: ``gfsp_distributed`` built the same

@@ -10,16 +10,21 @@ materialized star patterns).  Three strategies are registered by name:
            per-sweep candidate batch runs on the configured
            ``ExecutionBackend`` (host loop / batched device / sharded).
 ``efsp``   Algorithm 1, the exhaustive breadth-first scan over the
-           gSpan-enumerated pattern space (moved from ``core.efsp``).
-``gspan``  the raw-baseline variant of E.FSP: only property subsets that
-           gSpan actually mined as frequent patterns are scored, i.e. the
-           candidate space IS the pattern space (E.FSP scans all
-           ``C(n, k)`` subsets whether mined or not).  With complete
-           molecules the two coincide; the baseline exists to measure the
-           enumeration cost the paper's Table 3 attributes to gSpan.
+           property-subset lattice.  Backend-parametric like ``gfsp``:
+           each lattice level (all ``C(n, j)`` size-j subsets) is
+           evaluated as ONE candidate batch through
+           ``SweepWorkspace.sweep_candidates`` -- AMI and Def. 4.8 edges
+           for the whole level come back from a single lowering, and the
+           gSpan pattern space is never materialized.  (Passing a
+           pre-built ``subgraphs_dict`` selects the legacy gSpan-counted
+           scan instead.)
+``gspan``  the honest gSpan-cost baseline: the full pattern space is
+           enumerated (exponential, as the paper's Table 3 measures) and
+           only mined property subsets are scored.  With complete
+           molecules the detected SP coincides with efsp/gfsp.
 
-E.FSP/gSpan consume pre-counted pattern multiplicities, so their results
-are backend-independent; they accept (and ignore) the backend argument to
+gSpan consumes pre-counted pattern multiplicities, so its result is
+backend-independent; it accepts (and ignores) the backend argument to
 keep ``Compactor`` wiring uniform.
 """
 from __future__ import annotations
@@ -33,7 +38,7 @@ import numpy as np
 from repro.core.efsp import build_subgraphs_dict
 from repro.core.gfsp import FSPResult
 from repro.core.star import StarSweepResult, num_edges, star_groups
-from repro.core.sweep import pick_child
+from repro.core.sweep import MAX_SWEEP_CANDIDATES, pick_child
 from repro.core.triples import TripleStore
 
 from .backends import ExecutionBackend, HostBackend, Registry, get_backend
@@ -135,27 +140,88 @@ class GreedyDetector:
 class ExhaustiveDetector:
     """E.FSP -- Algorithm 1: exhaustive frequent-star-pattern detection.
 
-    Consumes the frequent-pattern space enumerated by gSpan over the RDF
-    molecules of a class (``subgraphsDict``: property subset -> star
-    subgraphs over that subset), then breadth-first scans ALL property
-    subsets of cardinality ``|S| .. 2``, keeping the subset whose
-    subgraphs minimize the Def. 4.8 edge objective.  O(2^n) in the number
-    of class properties -- the cost G.FSP avoids (paper: >= 3 orders of
-    magnitude).
+    Breadth-first scans ALL property subsets of cardinality ``|S| .. 2``,
+    keeping the subset that minimizes the Def. 4.8 edge objective.
+    O(2^n) subset *evaluations* in the number of class properties -- but
+    the evaluations no longer pay gSpan's pattern-space enumeration: each
+    lattice level is packed into one column-mask stack and evaluated as a
+    single candidate batch through the backend's
+    ``SweepWorkspace.sweep_candidates`` (one lowering per level on the
+    jax backends, one vectorized group-by per subset on host).  The
+    entity universe is the workspace's (entities complete over S, §4.3
+    (a)), shared with G.FSP, so efsp <-> gfsp parity is exact by
+    construction.
+
+    Passing a pre-built ``subgraphs_dict`` (property subset ->
+    ``[(object_tuple, support), ...]``) runs the legacy gSpan-counted
+    scan instead -- the paper-literal Algorithm 1 over an externally
+    mined pattern space.
     """
 
     name = "efsp"
 
     def __init__(self, min_support: int = 1) -> None:
+        # only consulted by the legacy subgraphs_dict path (gSpan mining
+        # threshold); the lattice engine evaluates every subset exactly
         self.min_support = min_support
 
     def detect(self, store, class_id, *, backend=None, props=None,
                subgraphs_dict=None):
         t0 = time.perf_counter()
         s_all, n_s, am = _class_setup(store, class_id, props)
-        if subgraphs_dict is None:
+        if subgraphs_dict is None and self.min_support > 1:
+            # a mining threshold only exists in the gSpan pattern space;
+            # keep the legacy thresholded semantics rather than silently
+            # evaluating every subset exactly
             subgraphs_dict, _, _ = build_subgraphs_dict(
                 store, class_id, min_support=self.min_support)
+        if subgraphs_dict is not None:
+            return self._detect_from_patterns(store, class_id, s_all, n_s,
+                                              am, subgraphs_dict, t0)
+        backend = backend if backend is not None else HostBackend()
+        best: StarSweepResult | None = None
+        iterations = evaluations = 0
+        ws = None
+        if n_s >= 2:
+            ws = backend.workspace(store, class_id,
+                                   tuple(int(p) for p in s_all), n_s, am)
+        s_list = [int(p) for p in s_all]
+        for subset_card in range(n_s, 1, -1):
+            iterations += 1
+            # stream the level in engine-sized slabs: memory stays
+            # O(MAX_SWEEP_CANDIDATES x n_s) even when C(n, j) explodes,
+            # and every slab is one lowering on the batched backends
+            combo_iter = itertools.combinations(range(n_s), subset_card)
+            while True:
+                chunk = list(itertools.islice(combo_iter,
+                                              MAX_SWEEP_CANDIDATES))
+                if not chunk:
+                    break
+                m = len(chunk)
+                cols = np.fromiter(
+                    itertools.chain.from_iterable(chunk), dtype=np.int64,
+                    count=m * subset_card).reshape(m, subset_card)
+                masks = np.zeros((m, n_s), np.int32)
+                masks[np.arange(m)[:, None], cols] = 1
+                # the whole slab in one candidate batch: AMI + Def. 4.8
+                # edges for every size-j subset from one engine call
+                edges, amis = ws.sweep_candidates(masks)
+                evaluations += m
+                j = int(np.argmin(edges))   # first min = paper tie-break
+                if best is None or int(edges[j]) < best.edges:
+                    best = StarSweepResult(
+                        props=tuple(sorted(s_list[i] for i in chunk[j])),
+                        ami=int(amis[j]), am=am, n_total_props=n_s,
+                        edges=int(edges[j]))
+        if best is None:
+            best = StarSweepResult(props=(), ami=0, am=am,
+                                   n_total_props=n_s, edges=0)
+        return _result(store, class_id, best, am, iterations,
+                       evaluations, t0)
+
+    def _detect_from_patterns(self, store, class_id, s_all, n_s, am,
+                              subgraphs_dict, t0):
+        """Legacy Algorithm 1 over a pre-mined gSpan pattern space."""
         best: StarSweepResult | None = None
         iterations = evaluations = 0
         s_list = [int(p) for p in s_all]

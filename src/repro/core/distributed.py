@@ -95,9 +95,9 @@ def gfsp_distributed(store: TripleStore, class_id: int, *, mesh=None,
     return GreedyDetector().detect(store, class_id, backend=backend)
 
 
-def ami_bucketed(objmat, valid, mesh, *, dp_axes=("data",),
-                 cap_factor: float = 4.0, use_kernel: bool = True):
-    """Distinct-row count via hash-bucket exchange (shard_map).
+def ami_bucketed_batch(objmat, valid, col_masks, mesh, *, dp_axes=("data",),
+                       cap_factor: float = 4.0, use_kernel: bool = True):
+    """Candidate-batched distinct-row count via ONE hash-bucket exchange.
 
     The sort-based AMI is exact but a distributed sort exchanges the data
     over O(log^2 S) merge rounds (bench_fsp_scale baseline: 3035 s of
@@ -108,8 +108,15 @@ def ami_bucketed(objmat, valid, mesh, *, dp_axes=("data",),
     is detected and summed so exactness violations are observable), the
     owner dedups locally, and a psum merges counts.
 
-    objmat: (n, k) int32 row-sharded over ``dp_axes``; valid: (n,) bool.
-    Returns () int32 AMI.
+    The candidate axis rides the same schedule end to end: all C
+    column-mask candidates hash in one batched signature launch (Pallas
+    grid axis over candidates), route through ONE ``all_to_all`` whose
+    buffer carries a candidate dimension, and dedup/psum as (C,) vectors
+    -- one shard_map lowering per sweep instead of one per candidate.
+
+    objmat: (n, k) int32 row-sharded over ``dp_axes``; valid: (n,) bool;
+    col_masks: (C, k) int32 replicated column masks (1 = keep column).
+    Returns (C,) int32 AMI, one per candidate.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -120,36 +127,45 @@ def ami_bucketed(objmat, valid, mesh, *, dp_axes=("data",),
         if a in dp_axes:
             n_shards *= s_
 
-    def body(mat, val):
+    def body(mat, val, masks):
         nl = mat.shape[0]
-        # mask-aware signature: padding rows get the shared sentinel
-        sig = kops.row_signature(mat, valid=val, use_kernel=use_kernel)
+        c = masks.shape[0]
+        # candidates are column-masked views of the one sharded buffer
+        mats = mat[None, :, :] * masks[:, None, :]           # (c, nl, k)
+        # mask-aware signature: padding rows get the shared sentinel,
+        # independently per candidate
+        sig = kops.row_signature(mats, valid=val, use_kernel=use_kernel)
         sentinel = jnp.uint32(kops.SIG_SENTINEL)
-        owner = (sig[:, 0] % jnp.uint32(n_shards)).astype(jnp.int32)
-        owner = jnp.where(val, owner, n_shards)       # invalid -> overflow
+        owner = (sig[..., 0] % jnp.uint32(n_shards)).astype(jnp.int32)
+        owner = jnp.where(val[None, :], owner, n_shards)  # invalid -> dump
         cap = max(int(cap_factor * nl / n_shards) + 8, 8)
-        order = jnp.argsort(owner)
-        owner_s = owner[order]
-        sig_s = sig[order]
-        starts = jnp.searchsorted(owner_s, jnp.arange(n_shards))
-        pos = jnp.arange(nl) - starts[jnp.minimum(owner_s, n_shards - 1)]
+        order = jnp.argsort(owner, axis=1)
+        owner_s = jnp.take_along_axis(owner, order, axis=1)
+        sig_s = jnp.take_along_axis(sig, order[..., None], axis=1)
+        starts = jax.vmap(
+            lambda os: jnp.searchsorted(os, jnp.arange(n_shards)))(owner_s)
+        pos = jnp.arange(nl)[None, :] - jnp.take_along_axis(
+            starts, jnp.minimum(owner_s, n_shards - 1), axis=1)
         keep = (owner_s < n_shards) & (pos < cap)
-        dropped = jnp.sum((owner_s < n_shards) & (pos >= cap))
+        dropped = jnp.sum((owner_s < n_shards) & (pos >= cap), axis=1)
         # cap+1: slot ``cap`` is the dump slot for non-kept entries --
         # dumping them at (0, 0) would overwrite a real signature
-        buf = jnp.full((n_shards, cap + 1, 2), sentinel, jnp.uint32)
-        buf = buf.at[jnp.where(keep, owner_s, 0),
+        buf = jnp.full((n_shards, c, cap + 1, 2), sentinel, jnp.uint32)
+        ci = jnp.broadcast_to(jnp.arange(c)[:, None], (c, nl))
+        buf = buf.at[jnp.where(keep, owner_s, 0), ci,
                      jnp.where(keep, pos, cap)].set(
-            jnp.where(keep[:, None], sig_s, sentinel))
-        buf = buf[:, :cap]
-        # one exchange: shard i sends row j of buf to shard j
+            jnp.where(keep[..., None], sig_s, sentinel))
+        buf = buf[:, :, :cap]
+        # ONE exchange for the whole stack: shard i sends slab j to shard
+        # j; the candidate axis tags along inside each slab
         recv = jax.lax.all_to_all(buf, dp_axes, split_axis=0,
                                   concat_axis=0, tiled=True)
-        flat = recv.reshape(-1, 2)
-        sig_sorted, _ = kops.sort_signatures(flat)
-        bounds, n_groups = kops.seg_boundaries(sig_sorted,
-                                               use_kernel=use_kernel)
-        has_sent = jnp.any(jnp.all(sig_sorted == sentinel, axis=1))
+        flat = recv.transpose(1, 0, 2, 3).reshape(c, -1, 2)
+        sig_sorted, _ = kops.sort_signatures(flat)     # per-candidate sort
+        _, n_groups = kops.seg_boundaries(sig_sorted,
+                                          use_kernel=use_kernel)   # (c,)
+        has_sent = jnp.any(jnp.all(sig_sorted == sentinel, axis=-1),
+                           axis=-1)                                # (c,)
         local_distinct = n_groups - has_sent.astype(jnp.int32)
         total = jax.lax.psum(local_distinct, dp_axes)
         total = total + jax.lax.psum(dropped, dp_axes)  # upper-bound fix
@@ -158,5 +174,18 @@ def ami_bucketed(objmat, valid, mesh, *, dp_axes=("data",),
     spec_m = P(dp_axes, None)
     spec_v = P(dp_axes)
     # check_vma=False: pallas_call outputs do not carry vma metadata yet
-    return shard_map(body, mesh=mesh, in_specs=(spec_m, spec_v),
-                     out_specs=P(), check_vma=False)(objmat, valid)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(spec_m, spec_v, P(None, None)),
+                     out_specs=P(None), check_vma=False)(
+        objmat, valid, col_masks)
+
+
+def ami_bucketed(objmat, valid, mesh, *, dp_axes=("data",),
+                 cap_factor: float = 4.0, use_kernel: bool = True):
+    """Single-candidate distinct-row count: the C = 1 special case of
+    :func:`ami_bucketed_batch` with an all-ones column mask (kept as the
+    stable entry point for callers outside the sweep engine)."""
+    masks = jnp.ones((1, objmat.shape[1]), jnp.int32)
+    return ami_bucketed_batch(
+        objmat, valid, masks, mesh, dp_axes=dp_axes,
+        cap_factor=cap_factor, use_kernel=use_kernel)[0]

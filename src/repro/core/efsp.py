@@ -1,12 +1,18 @@
-"""E.FSP -- Algorithm 1: exhaustive frequent-star-pattern detection.
+"""gSpan pattern-space construction for the E.FSP baseline paths.
 
-E.FSP consumes the frequent-pattern space enumerated by gSpan over the RDF
-molecules of a class (``subgraphsDict``: property subset -> the star
-subgraphs over that subset), then breadth-first scans all property subsets
-of cardinality ``|S| .. 2`` keeping the subset whose subgraphs minimize the
-Def. 4.8 edge objective.  Complexity is O(2^n) in the number of class
-properties -- the pattern space itself is exponential, which is exactly the
-cost G.FSP avoids (paper reports >= 3 orders of magnitude).
+The paper's Algorithm 1 consumes the frequent-pattern space enumerated by
+gSpan over the RDF molecules of a class (``subgraphsDict``: property
+subset -> the star subgraphs over that subset).  Materializing that space
+is exponential -- the cost the paper's Table 3 attributes to E.FSP and
+that G.FSP avoids (>= 3 orders of magnitude).
+
+The DEFAULT exhaustive detector no longer pays it:
+``repro.api.ExhaustiveDetector`` scans the property-subset lattice
+level-by-level through the candidate-batched sweep engine
+(``core.sweep.SweepWorkspace.sweep_candidates``), computing AMI directly
+from the object matrix.  ``build_subgraphs_dict`` remains as (a) the
+input of the honest ``gspan`` baseline detector and (b) the legacy
+Algorithm-1 path selected by passing ``subgraphs_dict=`` explicitly.
 
 ``subgraphsDict`` construction: gSpan patterns over star molecules are
 star-shaped DFS codes rooted at the class vertex; each pattern fixes a set

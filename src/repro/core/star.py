@@ -92,6 +92,18 @@ def num_edges(ami_value: int, am: int, n_sp: int, n_s: int) -> int:
     return int(ami_value) * (n_sp + 1) + int(am) * (n_s - n_sp)
 
 
+def num_edges_batch(amis, am: int, n_sp, n_s: int) -> np.ndarray:
+    """Vectorized Def. 4.8 over aligned candidate arrays.
+
+    ``amis`` and ``n_sp`` are (C,) arrays (per-candidate AMI and |SP'|);
+    returns (C,) int64 #Edges -- the host-side reduction of a candidate
+    batch, replacing the per-candidate ``num_edges`` Python loop.
+    """
+    amis = np.asarray(amis, np.int64)
+    n_sp = np.asarray(n_sp, np.int64)
+    return amis * (n_sp + 1) + int(am) * (int(n_s) - n_sp)
+
+
 @dataclasses.dataclass(frozen=True)
 class StarSweepResult:
     """Evaluation of one candidate property subset."""
@@ -172,6 +184,29 @@ def ami_device(objmat, valid=None, use_kernel: bool = True):
     _, n_groups = kops.seg_boundaries(sig_sorted, use_kernel=use_kernel)
     if valid is not None:
         has_sentinel = jnp.any(~valid)
+        return n_groups - has_sentinel.astype(jnp.int32)
+    return n_groups
+
+
+def ami_device_batch(mats, valid=None, use_kernel: bool = True):
+    """AMI for a whole candidate stack: (C, N, K) int32 -> (C,) int32.
+
+    One signature launch (candidate axis = Pallas grid axis), one batched
+    per-candidate sort, one batched segment count -- the building block of
+    ``core.sweep.sweep_candidates``.  ``valid`` is (N,) (shared bucket
+    padding) or (C, N); each candidate's sentinel segment is subtracted
+    independently, so the padded-row convention of :func:`ami_device`
+    holds per candidate.
+    """
+    jax, jnp = _jax()
+    from repro.kernels import ops as kops
+    sig = kops.row_signature(mats, valid=valid,
+                             use_kernel=use_kernel)   # (C, N, 2)
+    sig_sorted, _ = kops.sort_signatures(sig)
+    _, n_groups = kops.seg_boundaries(sig_sorted,
+                                      use_kernel=use_kernel)  # (C,)
+    if valid is not None:
+        has_sentinel = jnp.any(~valid, axis=-1)       # () or (C,)
         return n_groups - has_sentinel.astype(jnp.int32)
     return n_groups
 

@@ -1,4 +1,5 @@
-"""Shape-bucketed sweep workspaces: the greedy descent's hot loop.
+"""Shape-bucketed, candidate-batched sweep workspaces: the detectors'
+hot loop.
 
 The seed executed every G.FSP descent step by re-extracting the class's
 object matrix from the store (full-graph ``np.isin`` scans per candidate)
@@ -19,17 +20,26 @@ A :class:`SweepWorkspace` fixes both costs structurally:
 * **one upload per class**: the device workspaces ship the matrix to
   device once; descent steps drop columns *on device* by masking them to
   a constant, so child matrices never round-trip through the host.
-* **one compile per bucket shape**: ``(n, k)`` is padded up to a
-  power-of-two bucket (rows carry a validity mask, columns a drop mask),
-  so the jitted sweep traces once per bucket and is cache-hit for every
-  subsequent class, descent level, and ``Compactor`` instance.  Masking a
-  column to zero is AMI-exact: the column contributes the same constant
-  to every row's signature, so the distinct-row count equals the count
-  over the surviving columns.
+* **one lowering per candidate batch**: ``sweep_candidates`` evaluates an
+  ARBITRARY stack of C column-mask candidates in a single jitted call --
+  the drop-one sweep is the C = |SP| special case, and E.FSP's
+  breadth-first lattice scan feeds each whole subset level through it.
+  On the sharded workspace the candidate axis rides one ``shard_map``
+  lowering (``distributed.ami_bucketed_batch``) instead of one collective
+  schedule per candidate.
+* **one compile per bucket shape**: ``(n, k, c)`` pads up to a
+  power-of-two bucket (rows carry a validity mask, columns a zero mask,
+  padding candidates are all-zero no-ops), so the jitted sweep traces
+  once per ``(n_b, k_b, c_b)`` bucket and is cache-hit for every
+  subsequent class, descent level, lattice level, and ``Compactor``
+  instance.  Masking a column to zero is AMI-exact: the column
+  contributes the same constant to every row's signature, so the
+  distinct-row count equals the count over the surviving columns.
 
-``TRACE_COUNTS`` records one entry per traced bucket shape -- the
-benchmark snapshot and the regression tests assert the trace count stays
-bounded by the number of distinct buckets, not the number of sweeps.
+``TRACE_COUNTS`` records one entry per traced bucket shape, and
+``EXEC_STATS`` counts executed lowerings vs logical descents (one
+``sweep``/``sweep_candidates`` call = one descent) -- the benchmark
+snapshot asserts one lowering per warm descent on the batched paths.
 """
 from __future__ import annotations
 
@@ -38,13 +48,18 @@ from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
-from .star import StarSweepResult, ami, num_edges
+from .star import StarSweepResult, ami, num_edges, num_edges_batch
 from .triples import TripleStore
 
 # -- bucket ladder -----------------------------------------------------------
 
 BUCKET_MIN_ROWS = 64    # floor: tiny classes share one compiled shape
 BUCKET_MIN_COLS = 2     # star patterns need >= 2 properties
+BUCKET_MIN_CANDS = 2    # candidate-axis floor (mirrors the column floor)
+
+# one lowering evaluates at most this many candidates; larger stacks are
+# chunked so the masked (c_b, n_b, k_b) intermediate stays VMEM/HBM-sane
+MAX_SWEEP_CANDIDATES = 256
 
 
 def _next_pow2(x: int) -> int:
@@ -64,9 +79,21 @@ def bucket_cols(k: int) -> int:
     return max(_next_pow2(k), BUCKET_MIN_COLS)
 
 
-# -- jit trace accounting ----------------------------------------------------
+def bucket_candidates(c: int) -> int:
+    """Candidate-axis bucket: next power of two, floored at 2, capped by
+    chunking at ``MAX_SWEEP_CANDIDATES`` (callers slice larger stacks)."""
+    return max(_next_pow2(min(c, MAX_SWEEP_CANDIDATES)), BUCKET_MIN_CANDS)
+
+
+# -- jit trace / execution accounting ----------------------------------------
 
 TRACE_COUNTS: dict[tuple, int] = {}
+
+# executed-lowering accounting (every invocation, cache hits included):
+# ``descents`` counts logical sweep calls, ``lowerings`` compiled-sweep
+# dispatches -- the batched engine keeps their ratio at 1 for any
+# candidate stack that fits one chunk
+EXEC_STATS = {"lowerings": 0, "descents": 0}
 
 
 def _note_trace(kind: str, shape: tuple) -> None:
@@ -77,14 +104,16 @@ def _note_trace(kind: str, shape: tuple) -> None:
 
 def reset_trace_stats() -> None:
     TRACE_COUNTS.clear()
+    EXEC_STATS["lowerings"] = 0
+    EXEC_STATS["descents"] = 0
 
 
 def clear_compile_cache() -> None:
     """Drop the compiled sweep functions AND the trace counters -- gives
     tests a deterministic cold start regardless of process history."""
     _bucket_sweep_fn.cache_clear()
-    _sharded_ami_fn.cache_clear()
-    TRACE_COUNTS.clear()
+    _sharded_sweep_fn.cache_clear()
+    reset_trace_stats()
 
 
 def trace_count() -> int:
@@ -94,6 +123,13 @@ def trace_count() -> int:
 
 def distinct_bucket_shapes() -> int:
     return len(TRACE_COUNTS)
+
+
+def lowerings_per_descent() -> float:
+    """Executed compiled-sweep calls per logical sweep since the last
+    reset (0.0 on the host path, which lowers nothing)."""
+    d = EXEC_STATS["descents"]
+    return EXEC_STATS["lowerings"] / d if d else 0.0
 
 
 # -- the compiled bucket sweep ----------------------------------------------
@@ -107,43 +143,40 @@ def _jax():
 
 @functools.lru_cache(maxsize=None)
 def _bucket_sweep_fn(use_kernel: bool):
-    """Build (once) the jitted drop-one sweep over a padded bucket.
+    """Build (once) the jitted candidate-batch sweep over a padded bucket.
 
-    All data-dependent quantities -- ``am``, the child cardinality, the
-    total property count -- enter as traced scalars, so the jit cache is
-    keyed ONLY by the bucket shape ``(n_b, k_b)``.
+    All data-dependent quantities -- ``am``, the per-candidate subset
+    sizes, the total property count -- enter as traced values, so the jit
+    cache is keyed ONLY by the bucket shape ``(n_b, k_b, c_b)``.
     """
     jax, jnp = _jax()
-    from .star import ami_device
+    from .star import ami_device_batch
 
-    def sweep(objmat, valid, col_masks, am, n_sp_child, n_s):
+    def sweep(objmat, valid, col_masks, am, n_sp, n_s):
         _note_trace("sweep", objmat.shape + (col_masks.shape[0],))
-
-        def one(mask):
-            return ami_device(objmat * mask[None, :], valid=valid,
-                              use_kernel=use_kernel)
-
-        amis = jax.vmap(one)(col_masks)
-        edges = amis * (n_sp_child + 1) + am * (n_s - n_sp_child)
+        masked = objmat[None, :, :] * col_masks[:, None, :]  # (c, n, k)
+        amis = ami_device_batch(masked, valid=valid, use_kernel=use_kernel)
+        edges = amis * (n_sp + 1) + am * (n_s - n_sp)
         return edges, amis
 
     return jax.jit(sweep)
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_ami_fn(mesh, dp_axes: tuple, use_kernel: bool):
-    """Jitted masked-candidate AMI through the explicit hash-bucket
-    collective schedule (``core.distributed.ami_bucketed``): the only
-    distinct-count lowering that is exact on real multi-axis meshes."""
+def _sharded_sweep_fn(mesh, dp_axes: tuple, use_kernel: bool):
+    """Jitted candidate-batch AMI through the explicit hash-bucket
+    collective schedule (``core.distributed.ami_bucketed_batch``): the
+    only distinct-count lowering that is exact on real multi-axis meshes,
+    now carrying the whole candidate stack through ONE all_to_all."""
     jax, jnp = _jax()
-    from .distributed import ami_bucketed
+    from .distributed import ami_bucketed_batch
 
-    def one(objmat, valid, col_mask):
-        _note_trace("sharded", objmat.shape)
-        return ami_bucketed(objmat * col_mask[None, :], valid, mesh,
-                            dp_axes=dp_axes, use_kernel=use_kernel)
+    def batch(objmat, valid, col_masks):
+        _note_trace("sharded", objmat.shape + (col_masks.shape[0],))
+        return ami_bucketed_batch(objmat, valid, col_masks, mesh,
+                                  dp_axes=dp_axes, use_kernel=use_kernel)
 
-    return jax.jit(one)
+    return jax.jit(batch)
 
 
 # -- selection rule ----------------------------------------------------------
@@ -171,7 +204,10 @@ class SweepWorkspace(Protocol):
     ``props`` is the *current* property subset (shrinks as the descent
     drops columns); ``sweep()`` returns ``(edges, amis)`` aligned with it
     (entry ``j`` = subset with ``props[j]`` removed); ``descend(j)``
-    commits the drop.
+    commits the drop.  ``sweep_candidates(col_masks)`` evaluates an
+    arbitrary ``(C, |S|)`` 0/1 stack of column selections over the FULL
+    extracted property list -- E.FSP feeds whole lattice levels through
+    it -- and returns ``(edges, amis)`` aligned with the stack.
     """
 
     n_s: int
@@ -183,6 +219,9 @@ class SweepWorkspace(Protocol):
     def evaluate_current(self) -> StarSweepResult: ...
 
     def sweep(self) -> tuple[np.ndarray, np.ndarray]: ...
+
+    def sweep_candidates(self, col_masks) -> tuple[np.ndarray, np.ndarray]:
+        ...
 
     def descend(self, j: int) -> None: ...
 
@@ -220,27 +259,58 @@ class _WorkspaceBase:
         # column is simply masked out of every subsequent sweep)
         del self._active[j]
 
+    def _normalize_masks(self, col_masks) -> np.ndarray:
+        masks = np.asarray(col_masks)
+        if masks.ndim != 2 or masks.shape[1] != len(self._all_props):
+            raise ValueError(
+                f"col_masks must be (C, {len(self._all_props)}), "
+                f"got {masks.shape}")
+        # canonicalize to 0/1: the device paths MULTIPLY by the mask, so
+        # any other truthy value would silently skew ids (and parity)
+        return np.ascontiguousarray((masks != 0).astype(np.int32))
+
+    def _drop_one_stack(self, n_rows: int) -> np.ndarray:
+        """(n_rows, k_all) 0/1 drop-one stack: row j = active columns
+        with column j dropped (a no-op candidate when j is inactive or
+        beyond ``k_all`` -- callers discard those rows)."""
+        k_all = len(self._all_props)
+        base = np.zeros((k_all,), np.int32)
+        base[self._active] = 1
+        masks = np.repeat(base[None, :], n_rows, axis=0)
+        idx = np.arange(min(n_rows, k_all))
+        masks[idx, idx] = 0
+        return masks
+
 
 class HostSweepWorkspace(_WorkspaceBase):
-    """Sequential numpy sweep over column views of the parent matrix."""
+    """Sequential numpy evaluation over column views of the parent matrix."""
 
     def sweep(self) -> tuple[np.ndarray, np.ndarray]:
-        k = self.k
-        edges = np.empty((k,), np.int64)
-        amis = np.empty((k,), np.int64)
-        for j in range(k):
-            cols = self._active[:j] + self._active[j + 1:]
-            a = ami(self.matrix[:, cols])
-            amis[j] = a
-            edges[j] = num_edges(a, self.am, k - 1, self.n_s)
+        # no shape bucket to keep invariant on host: only the active
+        # rows of the drop-one stack are evaluated
+        masks = self._drop_one_stack(len(self._all_props))
+        return self.sweep_candidates(masks[np.asarray(self._active)])
+
+    def sweep_candidates(self, col_masks) -> tuple[np.ndarray, np.ndarray]:
+        masks = self._normalize_masks(col_masks)
+        EXEC_STATS["descents"] += 1
+        n = self.matrix.shape[0]
+        amis = np.empty((masks.shape[0],), np.int64)
+        for i in range(masks.shape[0]):
+            cols = np.flatnonzero(masks[i])
+            # zero surviving columns: every row is the same empty tuple
+            amis[i] = ami(self.matrix[:, cols]) if cols.size \
+                else (1 if n else 0)
+        n_sp = (masks != 0).sum(axis=1)
+        edges = num_edges_batch(amis, self.am, n_sp, self.n_s)
         return edges, amis
 
 
 class DeviceSweepWorkspace(_WorkspaceBase):
     """Batched jax sweep over a bucket-padded on-device parent buffer.
 
-    Upload happens once, in the constructor; each ``sweep()`` ships only
-    a ``(k_b, k_b)`` drop-mask stack.  Already-descended columns stay in
+    Upload happens once, in the constructor; each candidate batch ships
+    only a ``(c_b, k_b)`` mask stack.  Already-descended columns stay in
     the buffer, permanently masked -- dropping a column is a host-side
     bookkeeping update, not a transfer.
     """
@@ -278,40 +348,56 @@ class DeviceSweepWorkspace(_WorkspaceBase):
             self._dev = jnp.asarray(buf)
             self._valid = jnp.asarray(valid)
 
-    def _col_masks(self) -> np.ndarray:
-        """(k_b, k_b) int32: row j = active columns with column j dropped.
-
-        The stack always spans the FULL bucket width -- rows for inactive
-        or padding columns are no-op candidates (mask == current active
-        set) whose results the host discards -- so the compiled sweep
-        shape is invariant across descent levels: one trace per bucket,
-        not per (bucket, |SP|) pair.
-        """
-        base = np.zeros((self.k_bucket,), np.int32)
-        base[self._active] = 1
-        masks = np.repeat(base[None, :], self.k_bucket, axis=0)
-        np.fill_diagonal(masks, 0)
-        return masks
-
     def sweep(self) -> tuple[np.ndarray, np.ndarray]:
-        _, jnp = _jax()
+        # the drop-one stack spans FULL bucket height so the compiled
+        # sweep shape is invariant across descent levels (one trace per
+        # bucket, not per (bucket, |SP|) pair); no-op rows are discarded
         self._ensure_uploaded()
-        edges, amis = _bucket_sweep_fn(self.use_kernel)(
-            self._dev, self._valid, jnp.asarray(self._col_masks()),
-            self.am, self.k - 1, self.n_s)
+        edges, amis = self.sweep_candidates(
+            self._drop_one_stack(self.k_bucket))
         act = np.asarray(self._active)
-        return np.asarray(edges)[act].astype(np.int64), \
-            np.asarray(amis)[act].astype(np.int64)
+        return edges[act], amis[act]
+
+    def _run_batch(self, stack: np.ndarray, n_sp: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """One lowering over a (c_b, k_b) padded stack."""
+        _, jnp = _jax()
+        EXEC_STATS["lowerings"] += 1
+        edges, amis = _bucket_sweep_fn(self.use_kernel)(
+            self._dev, self._valid, jnp.asarray(stack), self.am,
+            jnp.asarray(n_sp), self.n_s)
+        return np.asarray(edges), np.asarray(amis)
+
+    def sweep_candidates(self, col_masks) -> tuple[np.ndarray, np.ndarray]:
+        masks = self._normalize_masks(col_masks)
+        EXEC_STATS["descents"] += 1
+        self._ensure_uploaded()
+        n_cand, k_all = masks.shape
+        edges_out = np.empty((n_cand,), np.int64)
+        amis_out = np.empty((n_cand,), np.int64)
+        for lo in range(0, n_cand, MAX_SWEEP_CANDIDATES):
+            chunk = masks[lo:lo + MAX_SWEEP_CANDIDATES]
+            c_b = bucket_candidates(chunk.shape[0])
+            stack = np.zeros((c_b, self.k_bucket), np.int32)
+            stack[:chunk.shape[0], :k_all] = chunk
+            n_sp = stack.sum(axis=1, dtype=np.int32)
+            edges, amis = self._run_batch(stack, n_sp)
+            m = chunk.shape[0]
+            edges_out[lo:lo + m] = edges[:m].astype(np.int64)
+            amis_out[lo:lo + m] = amis[:m].astype(np.int64)
+        return edges_out, amis_out
 
 
 class ShardedSweepWorkspace(DeviceSweepWorkspace):
     """Device workspace with rows sharded over the mesh's DP axes.
 
     With ``mesh=None`` this *is* the single-device bucketed sweep (same
-    jit cache, same bucket ladder).  On a real mesh each candidate's AMI
-    runs through the explicit ``ami_bucketed`` collective schedule; the
-    column-drop multiply happens under GSPMD with row sharding preserved,
-    so the buffer still uploads exactly once per descent.
+    jit cache, same bucket ladder).  On a real mesh the WHOLE candidate
+    stack runs through one ``ami_bucketed_batch`` collective schedule per
+    chunk -- one shard_map lowering per descent, not one per candidate;
+    the column-drop multiply happens inside the shard_map body with row
+    sharding preserved, so the buffer still uploads exactly once per
+    descent.
     """
 
     def __init__(self, store, class_id, props, n_s, am, *, mesh=None,
@@ -341,18 +427,13 @@ class ShardedSweepWorkspace(DeviceSweepWorkspace):
         return row_multiple, (NamedSharding(self.mesh, P(axes, None)),
                               NamedSharding(self.mesh, P(axes)))
 
-    def sweep(self) -> tuple[np.ndarray, np.ndarray]:
+    def _run_batch(self, stack: np.ndarray, n_sp: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
         if self.mesh is None:
-            return super().sweep()
+            return super()._run_batch(stack, n_sp)
         _, jnp = _jax()
-        self._ensure_uploaded()      # also resolves dp_axes placement
-        fn = _sharded_ami_fn(self.mesh, self.dp_axes, self.use_kernel)
-        masks = self._col_masks()
-        k = self.k
-        amis = np.empty((k,), np.int64)
-        for j, col in enumerate(self._active):
-            amis[j] = int(fn(self._dev, self._valid,
-                             jnp.asarray(masks[col])))
-        edges = np.asarray([num_edges(int(a), self.am, k - 1, self.n_s)
-                            for a in amis], np.int64)
+        EXEC_STATS["lowerings"] += 1
+        fn = _sharded_sweep_fn(self.mesh, self.dp_axes, self.use_kernel)
+        amis = np.asarray(fn(self._dev, self._valid, jnp.asarray(stack)))
+        edges = num_edges_batch(amis, self.am, n_sp, self.n_s)
         return edges, amis

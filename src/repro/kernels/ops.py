@@ -34,40 +34,53 @@ SIG_SENTINEL = 0xFFFFFFFF
 def row_signature(mat, valid=None, use_kernel: bool = True):
     """(N, K) int -> (N, 2) uint32 signature lanes (hi, lo).
 
-    ``valid``: optional (N,) bool mask; rows with ``valid == False``
-    (bucket/shard padding) receive the reserved sentinel signature so
-    group-by consumers can discount them with one segment subtraction.
-    Masking happens here -- at the op boundary -- so every caller
-    (single-device AMI, the bucketed sweep, the shard_map collective
-    schedule) shares one sentinel convention instead of hand-rolling it.
+    A candidate-batched ``(C, N, K)`` stack maps to ``(C, N, 2)``: the
+    kernel path runs one launch with C as a Pallas grid axis, and the
+    sentinel convention below is applied per candidate.
+
+    ``valid``: optional bool mask -- ``(N,)`` (shared across candidates)
+    or ``(C, N)``; rows with ``valid == False`` (bucket/shard padding)
+    receive the reserved sentinel signature so group-by consumers can
+    discount them with one segment subtraction.  Masking happens here --
+    at the op boundary -- so every caller (single-device AMI, the
+    bucketed sweep, the shard_map collective schedule) shares one
+    sentinel convention instead of hand-rolling it.
     """
-    if mat.ndim != 2:
-        raise ValueError(f"expected (N, K) matrix, got {mat.shape}")
+    if mat.ndim not in (2, 3):
+        raise ValueError(f"expected (N, K) or (C, N, K) matrix, "
+                         f"got {mat.shape}")
     if use_kernel:
         sig = _sig_hash(mat, interpret=_interpret())
     else:
         sig = ref.row_signature_ref(mat)
     if valid is not None:
-        sig = jnp.where(valid[:, None], sig, jnp.uint32(SIG_SENTINEL))
+        # (N,) -> (N, 1) and (C, N) -> (C, N, 1) both broadcast against
+        # (..., N, 2) with per-candidate alignment
+        sig = jnp.where(valid[..., None], sig, jnp.uint32(SIG_SENTINEL))
     return sig
 
 
 def seg_boundaries(sig_sorted, use_kernel: bool = True):
-    """Sorted (N, 2) sigs -> ((N,) boundaries, () segment count)."""
+    """Sorted (N, 2) sigs -> ((N,) boundaries, () segment count).
+
+    Batched ``(C, N, 2)`` (each candidate sorted along its own row axis)
+    -> ``((C, N) boundaries, (C,) counts)``.
+    """
     if use_kernel:
         return _seg_boundaries(sig_sorted, interpret=_interpret())
     b = ref.seg_boundaries_ref(sig_sorted)
-    return b, b.sum()
+    return b, b.sum(axis=-1)
 
 
 def sort_signatures(sig):
-    """Lexicographic sort of (N, 2) uint32 signatures; returns (sorted, order).
+    """Lexicographic sort of (..., N, 2) uint32 signatures along the row
+    axis; returns (sorted, order).  Batched stacks sort per candidate.
 
     Two uint32 lanes replace one uint64 key (TPU-friendly: no 64-bit lanes);
     jnp.lexsort keys are last-key-primary.
     """
-    order = jnp.lexsort((sig[:, 1], sig[:, 0]))
-    return sig[order], order
+    order = jnp.lexsort((sig[..., 1], sig[..., 0]), axis=-1)
+    return jnp.take_along_axis(sig, order[..., None], axis=-2), order
 
 
 # -- attention / recurrence --------------------------------------------------

@@ -45,28 +45,34 @@ def _mm3_step(h, k):
 
 
 def row_signature_ref(mat: jax.Array) -> jax.Array:
-    """(N, K) int32 -> (N, 2) uint32 murmur3 row hashes (two lanes).
+    """(..., N, K) int32 -> (..., N, 2) uint32 murmur3 row hashes.
 
     Lane 0 is seeded with 0, lane 1 with the golden ratio; together they
     form a 64-bit signature whose collision probability is ~N^2/2^64.
+    Leading batch dimensions (the candidate axis of a batched sweep) hash
+    independently with identical per-row results.
     """
     x = mat.astype(jnp.uint32)
-    n, k = x.shape
-    h_lo = jnp.zeros((n,), jnp.uint32)
-    h_hi = jnp.full((n,), jnp.uint32(_SEED_HI))
+    k = x.shape[-1]
+    h_lo = jnp.zeros(x.shape[:-1], jnp.uint32)
+    h_hi = jnp.full(x.shape[:-1], jnp.uint32(_SEED_HI))
     for j in range(k):
-        h_lo = _mm3_step(h_lo, x[:, j])
-        h_hi = _mm3_step(h_hi, x[:, j] ^ jnp.uint32(0xdeadbeef))
+        h_lo = _mm3_step(h_lo, x[..., j])
+        h_hi = _mm3_step(h_hi, x[..., j] ^ jnp.uint32(0xdeadbeef))
     h_lo = _fmix32(h_lo ^ jnp.uint32(k))
     h_hi = _fmix32(h_hi ^ jnp.uint32(k))
-    return jnp.stack([h_hi, h_lo], axis=1)
+    return jnp.stack([h_hi, h_lo], axis=-1)
 
 
 def seg_boundaries_ref(sig_sorted: jax.Array) -> jax.Array:
-    """(N, 2) sorted signatures -> (N,) int32; 1 where a new segment starts."""
-    diff = jnp.any(sig_sorted[1:] != sig_sorted[:-1], axis=1)
-    return jnp.concatenate([jnp.ones((1,), jnp.int32),
-                            diff.astype(jnp.int32)])
+    """(..., N, 2) sorted signatures -> (..., N) int32; 1 at segment starts.
+
+    Each leading-batch slice (candidate) gets its own always-set first
+    boundary, matching the per-candidate shift of the Pallas kernel.
+    """
+    diff = jnp.any(sig_sorted[..., 1:, :] != sig_sorted[..., :-1, :], axis=-1)
+    first = jnp.ones(sig_sorted.shape[:-2] + (1,), jnp.int32)
+    return jnp.concatenate([first, diff.astype(jnp.int32)], axis=-1)
 
 
 # ---------------------------------------------------------------------------

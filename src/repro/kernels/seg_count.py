@@ -9,6 +9,12 @@ The kernel is a blocked elementwise compare between the signature block and
 the one-row-shifted block (the wrapper materializes the shift, so no
 cross-block halo exchange is needed); each VMEM block also emits its partial
 boundary count so AMI can be accumulated without re-reading HBM.
+
+A ``(C, N, 2)`` per-candidate-sorted stack runs under grid ``(C, N / TILE_N)``
+-- the candidate axis of one ``sweep_candidates`` lowering is a Pallas grid
+dimension, and the first-row-always-differs shift is materialized per
+candidate, so every candidate keeps its own segment count (and its own
+padded-sentinel segment, which the caller subtracts).
 """
 from __future__ import annotations
 
@@ -29,10 +35,43 @@ def _seg_kernel(cur_ref, prev_ref, bound_ref, partial_ref):
     partial_ref[...] = jnp.sum(diff, keepdims=True)
 
 
+def _seg_kernel_batched(cur_ref, prev_ref, bound_ref, partial_ref):
+    # block is (1, TILE_N, 2): one candidate's tile per grid cell
+    diff = jnp.any(cur_ref[0] != prev_ref[0], axis=1).astype(jnp.int32)
+    bound_ref[0] = diff
+    partial_ref[0] = jnp.sum(diff, keepdims=True)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def seg_boundaries(sig_sorted: jax.Array, interpret: bool = True
                    ) -> tuple[jax.Array, jax.Array]:
-    """(N, 2) sorted sigs -> ((N,) int32 boundaries, () int32 n_segments)."""
+    """(N, 2) sorted sigs -> ((N,) int32 boundaries, () int32 n_segments).
+
+    A ``(C, N, 2)`` stack (each candidate sorted along its own row axis)
+    maps to ``((C, N) boundaries, (C,) counts)`` in one launch.
+    """
+    if sig_sorted.ndim == 3:
+        c, n, _ = sig_sorted.shape
+        prev = jnp.concatenate([~sig_sorted[:, :1], sig_sorted[:, :-1]],
+                               axis=1)
+        n_pad = -n % TILE_N
+        cur_p = jnp.pad(sig_sorted, ((0, 0), (0, n_pad), (0, 0)))
+        prev_p = jnp.pad(prev, ((0, 0), (0, n_pad), (0, 0)))
+        if n_pad:
+            prev_p = prev_p.at[:, n:].set(cur_p[:, n:])
+        grid = (c, cur_p.shape[1] // TILE_N)
+        bounds, partials = pl.pallas_call(
+            _seg_kernel_batched,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, TILE_N, 2), lambda ci, i: (ci, i, 0)),
+                      pl.BlockSpec((1, TILE_N, 2), lambda ci, i: (ci, i, 0))],
+            out_specs=[pl.BlockSpec((1, TILE_N), lambda ci, i: (ci, i)),
+                       pl.BlockSpec((1, 1), lambda ci, i: (ci, i))],
+            out_shape=[jax.ShapeDtypeStruct((c, cur_p.shape[1]), jnp.int32),
+                       jax.ShapeDtypeStruct((c, grid[1]), jnp.int32)],
+            interpret=interpret,
+        )(cur_p, prev_p)
+        return bounds[:, :n], partials.sum(axis=1)
     n = sig_sorted.shape[0]
     # prev[i] = sig[i-1]; row 0 compares against ~sig[0] so it always differs
     prev = jnp.concatenate([~sig_sorted[:1], sig_sorted[:-1]], axis=0)

@@ -7,10 +7,21 @@ is VPU-bound integer work; rows are tiled into VMEM blocks of
 ``TILE_N x K`` and both hash lanes are produced in one pass (the |SP|
 columns are unrolled -- property sets are small, <= 32).
 
+Two entry shapes share one kernel body:
+
+* ``(N, K)``    -- grid ``(N / TILE_N,)``: the single-candidate group-by.
+* ``(C, N, K)`` -- grid ``(C, N / TILE_N)``: the candidate-batched sweep.
+  The leading grid axis ranges over the C column-mask candidates of one
+  ``sweep_candidates`` lowering, so the whole stack hashes in ONE
+  ``pallas_call`` instead of C dispatches (or a vmap that re-traces the
+  kernel); the padded-row sentinel convention is applied per candidate by
+  the caller (``kernels.ops.row_signature``).
+
 Layout rationale: the row dimension maps to (sublanes x lanes) after the
 internal reshape; with TILE_N = 1024 the working set is
 1024 x K x 4 B <= 128 KiB for K <= 32, far under the ~16 MiB VMEM budget,
-letting the pipeline run several blocks deep.
+letting the pipeline run several blocks deep.  The candidate grid axis
+multiplies blocks, not block size, so the VMEM bound is unchanged.
 """
 from __future__ import annotations
 
@@ -25,8 +36,8 @@ from . import ref
 TILE_N = 1024
 
 
-def _sig_hash_kernel(x_ref, out_ref, *, k: int):
-    x = x_ref[...].astype(jnp.uint32)            # (TILE_N, K)
+def _hash_block(x: jax.Array, k: int) -> jax.Array:
+    """(TILE_N, K) uint32 -> (TILE_N, 2) uint32 (hi, lo) murmur3 lanes."""
     h_lo = jnp.zeros((x.shape[0],), jnp.uint32)
     h_hi = jnp.full((x.shape[0],), jnp.uint32(ref._SEED_HI))
     for j in range(k):                           # unrolled: K is small
@@ -34,12 +45,40 @@ def _sig_hash_kernel(x_ref, out_ref, *, k: int):
         h_hi = ref._mm3_step(h_hi, x[:, j] ^ jnp.uint32(0xdeadbeef))
     h_lo = ref._fmix32(h_lo ^ jnp.uint32(k))
     h_hi = ref._fmix32(h_hi ^ jnp.uint32(k))
-    out_ref[...] = jnp.stack([h_hi, h_lo], axis=1)
+    return jnp.stack([h_hi, h_lo], axis=1)
+
+
+def _sig_hash_kernel(x_ref, out_ref, *, k: int):
+    out_ref[...] = _hash_block(x_ref[...].astype(jnp.uint32), k)
+
+
+def _sig_hash_kernel_batched(x_ref, out_ref, *, k: int):
+    # block is (1, TILE_N, K): one candidate's tile per grid cell
+    out_ref[0] = _hash_block(x_ref[0].astype(jnp.uint32), k)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def sig_hash(mat: jax.Array, interpret: bool = True) -> jax.Array:
-    """(N, K) int32 -> (N, 2) uint32 row signatures (murmur3, two lanes)."""
+    """(N, K) int32 -> (N, 2) uint32 row signatures (murmur3, two lanes).
+
+    A ``(C, N, K)`` candidate stack maps to ``(C, N, 2)`` with the
+    candidate axis as the leading Pallas grid dimension (one launch).
+    """
+    if mat.ndim == 3:
+        c, n, k = mat.shape
+        n_pad = -n % TILE_N
+        padded = jnp.pad(mat, ((0, 0), (0, n_pad), (0, 0)))
+        grid = (c, padded.shape[1] // TILE_N)
+        out = pl.pallas_call(
+            functools.partial(_sig_hash_kernel_batched, k=k),
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, TILE_N, k), lambda ci, i: (ci, i, 0))],
+            out_specs=pl.BlockSpec((1, TILE_N, 2), lambda ci, i: (ci, i, 0)),
+            out_shape=jax.ShapeDtypeStruct((c, padded.shape[1], 2),
+                                           jnp.uint32),
+            interpret=interpret,
+        )(padded)
+        return out[:, :n]
     n, k = mat.shape
     n_pad = -n % TILE_N
     padded = jnp.pad(mat, ((0, n_pad), (0, 0)))

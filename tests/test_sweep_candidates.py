@@ -1,0 +1,229 @@
+"""Candidate-batched sweep engine: property-based parity of
+``sweep_candidates`` against per-candidate single sweeps on all three
+workspaces (ragged rows/cols straddling bucket boundaries), chunking,
+lowering accounting, and the level-batched E.FSP rewire."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import Compactor, get_backend
+from repro.core import sweep as core_sweep
+from repro.core.star import ami, num_edges
+from repro.core.triples import TripleStore
+
+jax = pytest.importorskip("jax")
+
+
+def _store_from_matrix(mat: np.ndarray) -> TripleStore:
+    """A complete-molecule class whose object matrix is ``mat``."""
+    t = []
+    for i in range(mat.shape[0]):
+        e = f"e{i:04d}"
+        t.append((e, "rdf:type", "C"))
+        for j in range(mat.shape[1]):
+            t.append((e, f"p{j:02d}", f"o{int(mat[i, j])}"))
+    return TripleStore.from_triples(t)
+
+
+def _workspaces(store, cid):
+    stats = store.class_stats(cid)
+    props = tuple(int(p) for p in stats.properties)
+    n_s, am = len(props), stats.n_instances
+    return {name: get_backend(name).workspace(store, cid, props, n_s, am)
+            for name in ("host", "device", "sharded")}, n_s, am
+
+
+def _reference(matrix: np.ndarray, masks: np.ndarray, am: int, n_s: int):
+    """Ground truth, one candidate at a time, straight from the parent
+    matrix (column SELECTION, not column masking)."""
+    edges, amis = [], []
+    for mask in masks:
+        cols = np.flatnonzero(mask)
+        a = ami(matrix[:, cols]) if cols.size \
+            else (1 if matrix.shape[0] else 0)
+        amis.append(a)
+        edges.append(num_edges(a, am, int(cols.size), n_s))
+    return edges, amis
+
+
+# rows straddle the 64/128 bucket boundary, cols the 4/8 boundary, and
+# the candidate count the 2/4/8/16 ladder rungs
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(60, 70), k=st.integers(2, 9), c=st.integers(1, 18),
+       card=st.integers(1, 5), seed=st.integers(0, 999))
+def test_sweep_candidates_matches_single_sweeps(n, k, c, card, seed):
+    rng = np.random.default_rng(seed)
+    mat = rng.integers(0, card, (n, k)).astype(np.int32)
+    store = _store_from_matrix(mat)
+    cid = int(store.dict.lookup("C"))
+    workspaces, n_s, am = _workspaces(store, cid)
+    masks = rng.integers(0, 2, (c, k)).astype(np.int32)
+    ref_edges, ref_amis = _reference(
+        workspaces["host"].matrix, masks, am, n_s)
+    for name, ws in workspaces.items():
+        edges, amis = ws.sweep_candidates(masks)
+        assert amis.tolist() == ref_amis, (name, masks)
+        assert edges.tolist() == ref_edges, (name, masks)
+        # batched call == per-candidate singleton calls
+        for i in range(c):
+            e1, a1 = ws.sweep_candidates(masks[i:i + 1])
+            assert int(a1[0]) == ref_amis[i], (name, i)
+            assert int(e1[0]) == ref_edges[i], (name, i)
+
+
+def test_sweep_candidates_chunks_large_stacks(monkeypatch):
+    """Stacks above MAX_SWEEP_CANDIDATES split into multiple lowerings of
+    one descent, with results stitched back in order."""
+    rng = np.random.default_rng(5)
+    mat = rng.integers(0, 3, (40, 4)).astype(np.int32)
+    store = _store_from_matrix(mat)
+    cid = int(store.dict.lookup("C"))
+    workspaces, n_s, am = _workspaces(store, cid)
+    masks = rng.integers(0, 2, (10, 4)).astype(np.int32)
+    ref_edges, ref_amis = _reference(
+        workspaces["host"].matrix, masks, am, n_s)
+    monkeypatch.setattr(core_sweep, "MAX_SWEEP_CANDIDATES", 4)
+    for name in ("device", "sharded"):
+        core_sweep.reset_trace_stats()
+        edges, amis = workspaces[name].sweep_candidates(masks)
+        assert amis.tolist() == ref_amis
+        assert edges.tolist() == ref_edges
+        assert core_sweep.EXEC_STATS["descents"] == 1
+        assert core_sweep.EXEC_STATS["lowerings"] == 3     # ceil(10 / 4)
+    core_sweep.reset_trace_stats()
+
+
+def test_one_lowering_per_descent_gfsp_device():
+    """The greedy descent dispatches exactly one compiled sweep per
+    logical descent step on the batched backends."""
+    rng = np.random.default_rng(11)
+    base = rng.integers(0, 2, (6, 5)).astype(np.int32)
+    mat = base[rng.integers(0, 6, (100,))]
+    store = _store_from_matrix(mat)
+    for backend in ("device", "sharded"):
+        core_sweep.reset_trace_stats()
+        Compactor(detector="gfsp", backend=backend).run(store)
+        assert core_sweep.EXEC_STATS["descents"] > 0
+        assert core_sweep.EXEC_STATS["lowerings"] == \
+            core_sweep.EXEC_STATS["descents"]
+        assert core_sweep.lowerings_per_descent() == 1.0
+    core_sweep.reset_trace_stats()
+
+
+@pytest.mark.parametrize("backend", ["host", "device", "sharded"])
+def test_efsp_level_batched_matches_gfsp(backend):
+    """The rewired E.FSP agrees with G.FSP on every backend (sensor
+    graph: Theorem 4.1 holds, detectors must coincide)."""
+    from repro.data.synthetic import SensorGraphSpec, generate
+    store = generate(SensorGraphSpec(n_observations=200, seed=13))
+    for cname in ("ssn:Observation", "ssn:Measurement"):
+        cid = int(store.dict.lookup(cname))
+        e = Compactor(detector="efsp", backend=backend).detect(store, cid)
+        g = Compactor(detector="gfsp", backend=backend).detect(store, cid)
+        assert set(e.props) == set(g.props)
+        assert e.edges == g.edges
+        assert e.ami == g.ami
+        assert g.evaluations <= e.evaluations
+
+
+def test_efsp_default_path_never_mines_gspan(monkeypatch):
+    """The rewired default E.FSP must not materialize the gSpan pattern
+    space; the legacy path (explicit subgraphs_dict) still works."""
+    from repro.api import detectors as det_mod
+    from repro.core.efsp import build_subgraphs_dict
+    store = _store_from_matrix(
+        np.array([[0, 1, 2], [0, 1, 2], [1, 1, 2], [1, 0, 0]], np.int32))
+    cid = int(store.dict.lookup("C"))
+    legacy_dict, _, _ = build_subgraphs_dict(store, cid)
+
+    def boom(*a, **kw):
+        raise AssertionError("default efsp path called gSpan")
+
+    monkeypatch.setattr(det_mod, "build_subgraphs_dict", boom)
+    d = det_mod.ExhaustiveDetector()
+    res = d.detect(store, cid)                       # must not raise
+    legacy = d.detect(store, cid, subgraphs_dict=legacy_dict)
+    assert res.edges == legacy.edges
+    assert set(res.props) == set(legacy.props)
+    assert res.evaluations == legacy.evaluations
+
+
+def test_efsp_min_support_keeps_legacy_threshold_semantics():
+    """min_support > 1 is a gSpan mining threshold: the detector must
+    route through the pattern space, not silently evaluate exactly."""
+    from repro.api.detectors import ExhaustiveDetector
+    from repro.core.efsp import build_subgraphs_dict
+    # one tuple appears once (support 1), another three times
+    mat = np.array([[0, 0], [1, 1], [1, 1], [1, 1]], np.int32)
+    store = _store_from_matrix(mat)
+    cid = int(store.dict.lookup("C"))
+    thresholded, _, _ = build_subgraphs_dict(store, cid, min_support=2)
+    want = ExhaustiveDetector().detect(
+        store, cid, subgraphs_dict=thresholded)
+    got = ExhaustiveDetector(min_support=2).detect(store, cid)
+    assert got.edges == want.edges
+    assert got.ami == want.ami == 1          # support-1 tuple not counted
+    exact = ExhaustiveDetector().detect(store, cid)
+    assert exact.ami == 2                    # exact scan sees both tuples
+
+
+def test_efsp_streams_large_levels_in_chunks(monkeypatch):
+    """Lattice levels wider than the engine chunk are sliced at the
+    detector (bounded host memory), with identical results and still
+    one lowering per engine call."""
+    from repro.api import detectors as det_mod
+    rng = np.random.default_rng(2)
+    base = rng.integers(0, 2, (4, 6)).astype(np.int32)
+    mat = base[rng.integers(0, 4, (80,))]
+    store = _store_from_matrix(mat)
+    cid = int(store.dict.lookup("C"))
+    want = Compactor(detector="efsp", backend="device").detect(store, cid)
+    monkeypatch.setattr(det_mod, "MAX_SWEEP_CANDIDATES", 4)
+    core_sweep.reset_trace_stats()
+    got = Compactor(detector="efsp", backend="device").detect(store, cid)
+    assert (got.edges, got.ami, set(got.props), got.evaluations) == \
+        (want.edges, want.ami, set(want.props), want.evaluations)
+    # C(6,3) = 20 wide level split into ceil(20/4) slabs, 1 lowering each
+    assert core_sweep.EXEC_STATS["descents"] > 5
+    assert core_sweep.lowerings_per_descent() == 1.0
+    core_sweep.reset_trace_stats()
+
+
+def test_efsp_iterations_and_evaluations_accounting():
+    """Level count and subset count match the paper's Algorithm 1 scan
+    (cardinalities |S| .. 2, every combination evaluated once)."""
+    from repro.data.synthetic import figure1_graph
+    store = figure1_graph()
+    cid = int(store.dict.lookup("C"))
+    res = Compactor(detector="efsp").detect(store, cid)
+    assert res.iterations == 3                       # cards 4, 3, 2
+    assert res.evaluations == 1 + 4 + 6              # C(4,4)+C(4,3)+C(4,2)
+
+
+def test_batched_kernel_ops_match_per_candidate():
+    """(C, N, K) signature/segment ops == the 2-D ops per candidate, for
+    both the Pallas kernels and the jnp references."""
+    import jax.numpy as jnp
+    from repro.kernels import ops as kops
+    rng = np.random.default_rng(3)
+    stack = rng.integers(0, 4, (5, 70, 3)).astype(np.int32)
+    valid = np.arange(70) < 61
+    for uk in (False, True):
+        sig3 = np.asarray(kops.row_signature(
+            jnp.asarray(stack), valid=jnp.asarray(valid), use_kernel=uk))
+        for ci in range(stack.shape[0]):
+            sig2 = np.asarray(kops.row_signature(
+                jnp.asarray(stack[ci]), valid=jnp.asarray(valid),
+                use_kernel=uk))
+            np.testing.assert_array_equal(sig3[ci], sig2)
+        sorted3, _ = kops.sort_signatures(jnp.asarray(sig3))
+        bounds3, counts3 = kops.seg_boundaries(sorted3, use_kernel=uk)
+        assert counts3.shape == (5,)
+        for ci in range(stack.shape[0]):
+            sorted2, _ = kops.sort_signatures(jnp.asarray(sig3[ci]))
+            bounds2, count2 = kops.seg_boundaries(sorted2, use_kernel=uk)
+            np.testing.assert_array_equal(np.asarray(sorted3)[ci],
+                                          np.asarray(sorted2))
+            np.testing.assert_array_equal(np.asarray(bounds3)[ci],
+                                          np.asarray(bounds2))
+            assert int(np.asarray(counts3)[ci]) == int(count2)
