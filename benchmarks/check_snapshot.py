@@ -18,6 +18,13 @@ Asserts the structural invariants the bench-smoke job exists to protect:
 4. **One lowering per descent** -- on the candidate-batched device and
    sharded paths every warm logical sweep (greedy descent step or efsp
    lattice level) must dispatch exactly one compiled lowering.
+5. **Query correctness and payoff** -- every star-query cell of every
+   workload returns the identical binding-set digest (raw == factorized
+   == batched-device, the Def. 4.11 equivalence), the factorized host
+   strategy is no slower than the raw baseline on the molecule-lookup
+   workload of the frequent-pattern-heavy class (the paper's "queries
+   get faster on G'" claim), and the batched device query path does not
+   retrace warm.
 
     python -m benchmarks.check_snapshot [path/to/BENCH_fsp.json]
 """
@@ -112,6 +119,50 @@ def check(path: str = DEFAULT_PATH) -> list[str]:
             errors.append(
                 f"{key[0]}x{key[1]} warm lowerings_per_descent is {lpd!r}, "
                 f"expected exactly 1.0 (candidate batching regressed)")
+
+    errors.extend(check_query(snap.get("query")))
+    return errors
+
+
+def check_query(query: dict | None) -> list[str]:
+    """Gate the star-query latency matrix (see module docstring, item 5)."""
+    errors: list[str] = []
+    if not query:
+        errors.append("snapshot has no query matrix (rerun --snapshot)")
+        return errors
+    for wname, cells in query.get("workloads", {}).items():
+        by_key = {(c["strategy"], c["backend"]): c for c in cells}
+        ref = cells[0]
+        for c in cells[1:]:
+            if c["digest"] != ref["digest"] or c["n_rows"] != ref["n_rows"]:
+                errors.append(
+                    f"query[{wname}] binding-set parity broken: "
+                    f"{c['strategy']}x{c['backend']} digest/rows "
+                    f"{c['digest']}/{c['n_rows']} != "
+                    f"{ref['digest']}/{ref['n_rows']}")
+        dev = by_key.get(("factorized", "device"))
+        if dev and dev.get("trace_count_warm", 0) != 0:
+            errors.append(
+                f"query[{wname}] batched device path retraced on the warm "
+                f"pass ({dev['trace_count_warm']} traces)")
+        if wname == "lookup_heavy":
+            raw = by_key.get(("raw", "host"))
+            fact = by_key.get(("factorized", "host"))
+            if raw and fact:
+                raw_ms = max(raw["exec_time_ms_warm"], MIN_HOST_MS)
+                if fact["exec_time_ms_warm"] > raw_ms:
+                    errors.append(
+                        f"factorized lookup on the frequent-pattern-heavy "
+                        f"class is slower than raw: "
+                        f"{fact['exec_time_ms_warm']:.1f} ms > "
+                        f"{raw_ms:.1f} ms (the 'queries get faster on "
+                        f"G\\'' claim regressed)")
+            elif not raw or not fact:
+                errors.append("query[lookup_heavy] missing raw/factorized "
+                              "host cells")
+    for wname in ("lookup", "lookup_heavy", "var_arm"):
+        if wname not in query.get("workloads", {}):
+            errors.append(f"query matrix missing workload {wname!r}")
     return errors
 
 

@@ -1,11 +1,13 @@
 """Benchmark driver: one module per paper table/figure + kernel micro +
-the distributed-FSP roofline cell + the detector x backend perf snapshot.
+the distributed-FSP roofline cell + the detector x backend perf snapshot
++ the star-query latency matrix (raw vs factorized x host/device).
 
     python -m benchmarks.run [--fast]        # full paper suite
     python -m benchmarks.run --snapshot      # BENCH_fsp.json only (CI smoke)
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import subprocess
@@ -102,6 +104,7 @@ def snapshot(fast: bool = True) -> dict:
             "/".join(str(x) for x in k): v
             for k, v in sorted(bucket_shapes.items())},
         "cells": cells,
+        "query": query_matrix(fast=fast),
     }
     with open(SNAPSHOT_PATH, "w") as f:
         json.dump(out, f, indent=1)
@@ -115,6 +118,104 @@ def snapshot(fast: bool = True) -> dict:
               f"low/desc={c['lowerings_per_descent_warm']:.1f}  "
               f"evals={c['evaluations']:<6d} "
               f"savings={c['pct_savings_triples']:.2f}%")
+    return out
+
+
+def query_matrix(fast: bool = True) -> dict:
+    """Star-query latency matrix: raw vs factorized x host/device.
+
+    The paper's claim is that frequent star patterns hurt *query
+    processing*, not only size -- this makes it a gated number.  A
+    frequent-pattern-heavy sensor graph (AM >> AMI) is compacted once;
+    the workload is every molecule of each class looked up as a
+    class-constrained all-ground star query (the shape the compaction
+    targets), plus a variable-arm workload recorded for transparency
+    (selective lookups favor G', whole-class scans favor the raw
+    slices).  Every cell must produce identical binding sets (digest);
+    ``factorized x host`` must be no slower than ``raw x host`` on the
+    frequent-pattern-heavy class, and the batched device path must not
+    retrace warm -- all gated in ``benchmarks.check_snapshot``.
+    """
+    from repro.api import Compactor
+    from repro.core import sweep as core_sweep
+    from repro.data.synthetic import SensorGraphSpec, generate
+    from repro.query import QueryEngine, StarQuery
+
+    n_obs = 4_000 if fast else 20_000
+    store = generate(SensorGraphSpec(n_observations=n_obs, seed=42))
+    comp = Compactor(detector="gfsp", backend="host")
+    comp.run(store)
+    fg = comp.fgraph
+    eng = QueryEngine(fg)
+    eng.raw_store         # build the expanded baseline outside the timers
+
+    # frequent-pattern-heavy class = largest AM / AMI ratio
+    def _ratio(cid):
+        t = fg.tables[cid]
+        return fg.support(cid).sum() / max(t.n_molecules, 1)
+    heavy = max(fg.tables, key=_ratio)
+
+    lookups: list[StarQuery] = []
+    for cid, t in sorted(fg.tables.items()):
+        for row in t.objects:
+            lookups.append(StarQuery(
+                arms=tuple((p, int(o)) for p, o in zip(t.props, row)),
+                class_id=cid))
+    heavy_lookups = [q for q in lookups if q.class_id == heavy]
+    var_queries = [
+        StarQuery(arms=((t.props[0], int(row[0])), (t.props[-1], None)),
+                  class_id=cid)
+        for cid, t in sorted(fg.tables.items()) for row in t.objects[:32]]
+
+    def _digest(bindings) -> str:
+        h = hashlib.sha1()
+        for b in bindings:
+            h.update(b.canonical().tobytes())
+        return h.hexdigest()[:16]
+
+    def _cell(workload, strategy, backend):
+        core_sweep.reset_trace_stats()
+        t0 = time.perf_counter()
+        res = eng.query_batch(workload, strategy=strategy, backend=backend)
+        cold = (time.perf_counter() - t0) * 1e3
+        traces_cold = core_sweep.trace_count()
+        t0 = time.perf_counter()
+        res = eng.query_batch(workload, strategy=strategy, backend=backend)
+        warm = (time.perf_counter() - t0) * 1e3
+        return res, {
+            "strategy": strategy, "backend": backend,
+            "exec_time_ms": round(cold, 3),
+            "exec_time_ms_warm": round(warm, 3),
+            "trace_count_cold": traces_cold,
+            "trace_count_warm": core_sweep.trace_count() - traces_cold,
+            "n_queries": len(workload),
+            "n_rows": int(sum(b.n_rows for b in res)),
+            "digest": _digest(res),
+        }
+
+    out: dict = {
+        "graph": {"n_observations": n_obs, "n_triples": store.n_triples,
+                  "seed": 42},
+        "heavy_class": store.dict.term(heavy),
+        "workloads": {},
+    }
+    for wname, workload in (("lookup", lookups),
+                            ("lookup_heavy", heavy_lookups),
+                            ("var_arm", var_queries)):
+        cells = []
+        for strategy, backend in (("raw", "host"), ("factorized", "host"),
+                                  ("factorized", "device")):
+            _, cell = _cell(workload, strategy, backend)
+            cells.append(cell)
+        out["workloads"][wname] = cells
+        base = cells[0]["exec_time_ms_warm"]
+        for c in cells:
+            tag = f"{c['strategy']}x{c['backend']}"
+            print(f"query {wname:13s} {tag:18s} "
+                  f"cold {c['exec_time_ms']:8.1f} ms  "
+                  f"warm {c['exec_time_ms_warm']:8.1f} ms  "
+                  f"({base / max(c['exec_time_ms_warm'], 1e-9):4.2f}x raw) "
+                  f"rows={c['n_rows']} digest={c['digest']}")
     return out
 
 

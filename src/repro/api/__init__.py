@@ -31,4 +31,4 @@ from .detectors import (DETECTORS, Detector, ExhaustiveDetector,  # noqa: F401
                         GreedyDetector, GSpanBaseline, get_detector,
                         register_detector)
 from .compactor import (ClassPlan, CompactionPlan, CompactionReport,  # noqa: F401
-                        Compactor, UpdateReport)
+                        Compactor, DeleteReport, UpdateReport)

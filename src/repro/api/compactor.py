@@ -18,6 +18,13 @@ algorithms (detect-FSP -> factorize -> verify lossless):
   the input store is never mutated, and the compactor commits its
   internal state (factorized graph + per-class surrogate signature maps)
   only after every class factorized successfully.
+* **Execution commits a ``FactorizedGraph``** (``core.fgraph``): G' is
+  not a bare triple array but a first-class structure -- molecule
+  tables (surrogate -> object-tuple rows per class), the ``instanceOf``
+  CSR, Def. 4.8 accounting, lossless ``expand()`` -- which is what the
+  ``repro.query`` star-query engine evaluates against.  ``Compactor.
+  graph`` remains the plain ``TripleStore`` view; ``Compactor.fgraph``
+  is the structured one.
 * **Incremental update** absorbs streaming inserts: new entities whose
   object tuple matches an existing star pattern link to its surrogate
   (one ``instanceOf`` edge); novel tuples mint new surrogates with
@@ -25,6 +32,10 @@ algorithms (detect-FSP -> factorize -> verify lossless):
   complete them.  Losslessness (Def. 4.10/4.11) is preserved at every
   step -- the axiom closure of the updated G' equals the closure of
   G + inserts (tested in tests/test_api.py).
+* **Deletes** route through ``FactorizedGraph.delete_triples`` /
+  ``delete_entities`` transactionally: triples covered by molecules
+  dissolve memberships, and molecules whose support falls below payoff
+  decompact in place -- the structure never misrepresents the graph.
 """
 from __future__ import annotations
 
@@ -36,6 +47,7 @@ import numpy as np
 
 from repro.core.factorize import (FactorizationResult, apply_molecule_map,
                                   factorize_classes)
+from repro.core.fgraph import DeleteStats, FactorizedGraph, MoleculeTable
 from repro.core.gfsp import FSPResult
 from repro.core.index import in_sorted
 from repro.core.star import row_groups
@@ -113,6 +125,7 @@ class CompactionReport:
     n_triples_before: int
     n_triples_after: int
     exec_time_ms: float
+    fgraph: FactorizedGraph | None = None   # the structured G' (queryable)
 
     @property
     def pct_savings_triples(self) -> float:
@@ -146,12 +159,12 @@ class UpdateReport:
 
 
 @dataclasses.dataclass
-class _ClassState:
-    """Per-class incremental state: SP + object-tuple -> surrogate map."""
+class DeleteReport:
+    """Outcome of one transactional ``Compactor.delete`` batch."""
 
-    props: tuple[int, ...]
-    sig: dict[tuple[int, ...], int]
-    next_ordinal: int
+    graph: TripleStore
+    stats: DeleteStats
+    exec_time_ms: float
 
 
 class Compactor:
@@ -173,9 +186,7 @@ class Compactor:
         self.backend = get_backend(backend, **(backend_opts or {}))
         self.min_predicted_savings = min_predicted_savings
         self.surrogate_prefix = surrogate_prefix
-        self._graph: TripleStore | None = None
-        self._state: dict[int, _ClassState] = {}
-        self._all_surrogates: set[int] = set()
+        self._fg: FactorizedGraph | None = None
 
     # -- detection ---------------------------------------------------------
     def detect(self, store: TripleStore, class_id: int,
@@ -221,23 +232,14 @@ class Compactor:
         pairs = [(e.class_id, e.props) for e in plan]
         graph, results = factorize_classes(
             store, pairs, surrogate_prefix=self.surrogate_prefix)
-        state: dict[int, _ClassState] = {}
-        all_sg: set[int] = set()
-        for entry, res in zip(plan, results):
-            # star_objects rows are aligned with surrogates and ordered
-            # over sorted props -- no rescan of the factorized graph
-            sig = {tuple(row): sg
-                   for row, sg in zip(res.star_objects.tolist(),
-                                      res.surrogates.tolist())}
-            state[entry.class_id] = _ClassState(
-                props=tuple(sorted(entry.props)), sig=sig,
-                next_ordinal=len(res.surrogates))
-            all_sg |= {int(x) for x in res.surrogates}
-        self._graph, self._state, self._all_surrogates = graph, state, all_sg
+        # star_objects rows are aligned with surrogates and ordered over
+        # sorted props -- the molecule tables build with no rescan of G'
+        self._fg = FactorizedGraph.from_compaction(graph, results)
         return CompactionReport(
             graph=graph, plan=plan, factorizations=results,
             n_triples_before=store.n_triples, n_triples_after=graph.n_triples,
-            exec_time_ms=(time.perf_counter() - t0) * 1e3)
+            exec_time_ms=(time.perf_counter() - t0) * 1e3,
+            fgraph=self._fg)
 
     def run(self, store: TripleStore,
             classes: Iterable[int] | None = None) -> CompactionReport:
@@ -246,10 +248,15 @@ class Compactor:
 
     # -- incremental path --------------------------------------------------
     @property
+    def fgraph(self) -> FactorizedGraph:
+        """The committed factorized graph (molecule tables + CSR)."""
+        if self._fg is None:
+            raise RuntimeError("Compactor.run()/execute() before .fgraph")
+        return self._fg
+
+    @property
     def graph(self) -> TripleStore:
-        if self._graph is None:
-            raise RuntimeError("Compactor.run()/execute() before .graph")
-        return self._graph
+        return self.fgraph.store
 
     def update(self, new_triples) -> UpdateReport:
         """Absorb streaming inserts into the factorized graph.
@@ -260,11 +267,12 @@ class Compactor:
         existing star pattern are linked to its surrogate; novel tuples
         mint fresh surrogates (continuing per-class ordinals); incomplete
         molecules and unplanned classes stay raw.  No full recomputation.
+        The molecule tables gain the fresh rows and the whole
+        ``FactorizedGraph`` commits atomically at the end.
         """
-        if self._graph is None:
-            raise RuntimeError("Compactor.run()/execute() before .update()")
+        fg = self.fgraph
         t0 = time.perf_counter()
-        g = self._graph
+        g = fg.store
         if isinstance(new_triples, np.ndarray):
             rows = np.asarray(new_triples, np.int32).reshape(-1, 3)
         else:
@@ -284,9 +292,14 @@ class Compactor:
         # overlapping-class entities keep the same semantics as a full
         # factorize_classes pass; the surrogate id set is loop-invariant
         # (ids minted below are never entities of another planned class)
-        sg_arr = np.asarray(sorted(self._all_surrogates), np.int64)
-        for cid, st in self._state.items():
-            props_arr = np.asarray(st.props, np.int32)
+        sg_arr = fg.surrogate_ids.astype(np.int64)
+        new_tables: dict[int, MoleculeTable] = {}
+        for cid, table in fg.tables.items():
+            sig = dict(table.sig)          # working copy: commit-at-end
+            next_ordinal = table.next_ordinal
+            props_arr = np.asarray(table.props, np.int32)
+            fresh_rows: list[tuple[int, ...]] = []
+            new_tables[cid] = table
             ents, objmat = combined.object_matrix(cid, props_arr)
             if ents.size == 0:
                 continue
@@ -299,7 +312,7 @@ class Compactor:
             fresh: list[tuple[int, tuple[int, ...]]] = []
             for gi in range(counts.shape[0]):
                 key = tuple(int(x) for x in r_mat[rep[gi]])
-                sg = st.sig.get(key)
+                sg = sig.get(key)
                 if sg is None:
                     fresh.append((gi, key))
                 else:
@@ -307,13 +320,16 @@ class Compactor:
             if fresh:
                 cname = combined.dict.term(cid)
                 names = [f"{self.surrogate_prefix}/{cname}/"
-                         f"{st.next_ordinal + j}" for j in range(len(fresh))]
+                         f"{next_ordinal + j}" for j in range(len(fresh))]
                 new_ids = combined.dict.ids(names)
-                st.next_ordinal += len(fresh)
+                next_ordinal += len(fresh)
                 for (gi, key), sid in zip(fresh, new_ids.tolist()):
                     sg_of_group[gi] = sid
-                    st.sig[key] = int(sid)
-                    self._all_surrogates.add(int(sid))
+                    sig[key] = int(sid)
+                    fresh_rows.append(key)
+                new_tables[cid] = table.with_rows(
+                    new_ids, np.asarray(fresh_rows, np.int32),
+                    next_ordinal)
             n_new_sg += len(fresh)
             n_reused += int(counts.shape[0]) - len(fresh)
             n_absorbed += int(r_ents.shape[0])
@@ -334,9 +350,64 @@ class Compactor:
                                             presorted=True)
             combined.add_ids(rewritten)
             combined._index = kept_index.merged(rewritten)
-        self._graph = combined
+        self._fg = FactorizedGraph(
+            combined, new_tables,
+            payoff_min_support=fg.payoff_min_support)
         return UpdateReport(
             graph=combined, n_new_triples=int(rows.shape[0]),
             n_entities_absorbed=n_absorbed, n_new_surrogates=n_new_sg,
             n_surrogates_reused=n_reused,
             exec_time_ms=(time.perf_counter() - t0) * 1e3)
+
+    def delete(self, triples=None, entities=None) -> DeleteReport:
+        """Remove semantic triples and/or entities from the factorized
+        graph transactionally.
+
+        ``triples``: an (n, 3) id array or an iterable of term triples;
+        ``entities``: an id array or an iterable of entity terms.  Both
+        route through :class:`~repro.core.fgraph.FactorizedGraph` delete
+        support -- molecule-covered triples dissolve memberships, and
+        molecules whose support drops below payoff decompact in place.
+        The new graph commits only if every step succeeds.
+        """
+        fg = self.fgraph
+        t0 = time.perf_counter()
+        stats = DeleteStats()
+        if triples is not None:
+            if isinstance(triples, np.ndarray):
+                rows = np.asarray(triples, np.int32).reshape(-1, 3)
+            else:
+                # lookup, never id(): a term the graph has never seen
+                # cannot name an existing triple, and a no-op delete must
+                # not grow the shared dictionary as a side effect
+                d = fg.store.dict
+                rows_list = []
+                n_unknown = 0
+                for s, p, o in triples:
+                    ids3 = (d.lookup(s), d.lookup(p), d.lookup(o))
+                    if None in ids3:
+                        n_unknown += 1
+                        continue
+                    rows_list.append(ids3)
+                stats.n_requested += n_unknown     # counted, trivially absent
+                rows = np.asarray(rows_list, np.int32).reshape(-1, 3)
+            fg, st = fg.delete_triples(rows)
+            for f in dataclasses.fields(st):
+                setattr(stats, f.name,
+                        getattr(stats, f.name) + getattr(st, f.name))
+        if entities is not None:
+            if isinstance(entities, np.ndarray):
+                ids = np.asarray(entities, np.int64).reshape(-1)
+            else:
+                d = fg.store.dict
+                looked = [d.lookup(e) for e in entities]
+                stats.n_requested += sum(1 for x in looked if x is None)
+                ids = np.asarray([x for x in looked if x is not None],
+                                 np.int64)
+            fg, st = fg.delete_entities(ids)
+            for f in dataclasses.fields(st):
+                setattr(stats, f.name,
+                        getattr(stats, f.name) + getattr(st, f.name))
+        self._fg = fg
+        return DeleteReport(graph=fg.store, stats=stats,
+                            exec_time_ms=(time.perf_counter() - t0) * 1e3)

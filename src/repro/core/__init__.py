@@ -14,4 +14,5 @@ from .sweep import (SweepWorkspace, HostSweepWorkspace,  # noqa: F401
 from .gfsp import gfsp, FSPResult  # noqa: F401
 from .efsp import efsp, build_subgraphs_dict  # noqa: F401
 from .factorize import factorize, factorize_classes, FactorizationResult  # noqa: F401
+from .fgraph import DeleteStats, FactorizedGraph, MoleculeTable  # noqa: F401
 from .axioms import expand, semantic_triples, match_star  # noqa: F401

@@ -90,6 +90,20 @@ def merge_disjoint(old: np.ndarray, new: np.ndarray, perm=SPO_PERM
     return out
 
 
+def csr_take(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Flat gather indices for concatenated CSR extents: the segmented
+    expansion ``[starts[i], starts[i] + counts[i])`` for every i, as one
+    index vector (``arange`` minus each segment's running offset).  The
+    shared idiom behind every segmented gather in this codebase --
+    object-matrix extraction, instanceOf-CSR member emission, and the
+    query engine's subject joins."""
+    counts = np.asarray(counts)
+    total = int(counts.sum())
+    within = np.arange(total) - np.repeat(np.cumsum(counts) - counts,
+                                          counts)
+    return np.repeat(starts, counts) + within
+
+
 def in_sorted(values: np.ndarray, sorted_ref: np.ndarray) -> np.ndarray:
     """Membership of ``values`` in a sorted-unique 1-D ``sorted_ref``
     via binary search -- the index-join replacement for ``np.isin``
@@ -205,10 +219,7 @@ class GraphIndex:
             # segmented gather: concatenated per-predicate extents become
             # one row-index vector (start offset + within-segment rank)
             col = np.repeat(np.arange(props.size), lengths)
-            first = np.repeat(starts, lengths)
-            within = np.arange(total) - np.repeat(
-                np.cumsum(lengths) - lengths, lengths)
-            sub = self.rows[first + within]
+            sub = self.rows[csr_take(starts, lengths)]
             idx = np.searchsorted(ents, sub[:, 0])
             idx_c = np.minimum(idx, ents.size - 1)
             hit = (idx < ents.size) & (ents[idx_c] == sub[:, 0])

@@ -63,6 +63,34 @@ class FactorizedStore:
             return self.flat[idx]
         return self.molecules[self.instance_of[idx]]
 
-    def batch(self, idx: np.ndarray) -> np.ndarray:
-        """Gather a batch; device path sends unique molecules once."""
-        return self[np.asarray(idx)]
+    def batch_parts(self, idx: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Decompose a batch gather into ``(unique_molecules, inverse)``.
+
+        ``unique_molecules[inverse]`` reconstructs the batch; the first
+        part is the whole device-transfer payload -- each distinct
+        molecule referenced by the batch crosses the link exactly once,
+        the ``inverse`` pointer array (4 bytes/row) does the instanceOf
+        expansion on the far side.  Flat stores degrade to the identity
+        decomposition (every row is its own molecule).
+        """
+        idx = np.asarray(idx)
+        if self.flat is not None:
+            rows = self.flat[idx].reshape(-1, self.flat.shape[1])
+            return rows, np.arange(rows.shape[0]).reshape(idx.shape)
+        mol = self.instance_of[idx]
+        uniq, inv = np.unique(mol, return_inverse=True)
+        return self.molecules[uniq], inv.reshape(mol.shape)
+
+    def batch(self, idx: np.ndarray, device: bool = False) -> np.ndarray:
+        """Gather a batch; the device path sends unique molecules once.
+
+        ``device=True`` ships only the unique-molecule payload of
+        :meth:`batch_parts` across the host->device link and expands the
+        ``instanceOf`` pointers on device (returns a ``jax.Array``); the
+        default host path performs the same two-step gather in numpy.
+        """
+        mols, inv = self.batch_parts(idx)
+        if device:
+            import jax.numpy as jnp
+            return jnp.take(jnp.asarray(mols), jnp.asarray(inv), axis=0)
+        return mols[inv]

@@ -70,6 +70,44 @@ def compress_tree(grads, residual):
     return decoded, new_res
 
 
+def make_pod_compress_fn(mesh=None, *, n_pods: int | None = None,
+                         pod_axis: str = "pod"):
+    """Gradient codec for the pod-boundary (DCN) reduction -- and ONLY
+    that boundary.
+
+    Returns ``None`` when no pod boundary exists (no mesh, no ``pod``
+    axis, or a single pod): intra-pod gradients ride the 50 GB/s ICI
+    and must stay uncompressed -- compressing them buys nothing and
+    costs precision.  With a real boundary, returns a ``compress_fn``
+    for the ``make_train_step`` hook: one int8 encode/decode round per
+    leaf, exactly the payload the cross-pod all-reduce would carry
+    (the sum of int8 shards is representable in f32, so decoding before
+    the optimizer is equivalent to decoding after the DCN hop).
+
+    The hook is stateless by design -- error feedback needs per-step
+    state, which lives in the :func:`compressed` optimizer wrapper;
+    compose both when EF is wanted on top of boundary-only compression.
+    """
+    if n_pods is None:
+        if mesh is None:
+            return None
+        names = tuple(getattr(mesh, "axis_names", ()))
+        if pod_axis not in names:
+            return None
+        shape = getattr(mesh, "devices", None)
+        sizes = dict(zip(names, shape.shape)) if shape is not None else {}
+        n_pods = int(sizes.get(pod_axis, 1))
+    if n_pods <= 1:
+        return None
+
+    def compress_fn(grads):
+        return jax.tree.map(
+            lambda g: dequantize_int8(*quantize_int8(g)).astype(g.dtype),
+            grads)
+
+    return compress_fn
+
+
 def compressed(opt: Optimizer) -> Optimizer:
     """Wrap an optimizer so its incoming gradients pass through int8
     quantization with error feedback.  State: ``{"inner": <wrapped

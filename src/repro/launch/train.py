@@ -5,7 +5,13 @@ production substrate engaged: deterministic sharded data pipeline,
 AdamW/adafactor, async atomic checkpointing with retention, crash/resume
 (--preempt-at simulates a SIGTERM mid-run; rerunning with the same
 --ckpt-dir resumes from the newest checkpoint), and optional int8
-error-feedback gradient compression.
+gradient compression on the pod boundary.
+
+``--compress-grads`` routes through the ``compress_fn`` hook of
+``make_train_step`` and engages ONLY when the gradient reduction
+actually crosses a pod (DCN) boundary (``--pods > 1``): intra-pod
+gradients ride ICI and stay uncompressed -- the seed wrapped the whole
+optimizer, quantizing every reduction regardless of the link it used.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
         --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ck
@@ -24,7 +30,7 @@ import jax.numpy as jnp
 from repro.ckpt import Checkpointer, latest_step
 from repro.configs import get_arch, reduced
 from repro.data.lm_pipeline import LMPipeline, PipelineSpec
-from repro.dist.compression import compressed
+from repro.dist.compression import make_pod_compress_fn
 from repro.models.blocks import Ctx
 from repro.models.lm import LM
 from repro.train import make_optimizer, make_train_step
@@ -44,7 +50,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--preempt-at", type=int, default=-1,
                     help="simulate preemption after this step")
-    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8-compress the pod-boundary gradient "
+                         "reduction (no-op unless --pods > 1)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pods the gradient all-reduce crosses; intra-pod "
+                         "gradients are never compressed")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args(argv)
@@ -59,10 +70,15 @@ def main(argv=None) -> dict:
     ctx = Ctx(cfg=cfg)
     opt = make_optimizer(cfg, base_lr=args.lr, warmup=10,
                          total=max(args.steps, 100))
+    compress_fn = None
     if args.compress_grads:
-        opt = compressed(opt)
+        compress_fn = make_pod_compress_fn(n_pods=args.pods)
+        print("grad compression:",
+              "pod-boundary int8" if compress_fn is not None
+              else "off (no pod boundary to compress)")
     step_fn = jax.jit(make_train_step(model, opt, ctx=ctx,
-                                      grad_accum=cfg.grad_accum))
+                                      grad_accum=cfg.grad_accum,
+                                      compress_fn=compress_fn))
     pipe = LMPipeline(PipelineSpec(cfg.vocab_size, args.seq, args.batch,
                                    seed=args.seed))
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
@@ -111,7 +127,9 @@ def main(argv=None) -> dict:
     print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
     return {"final_loss": losses[-1], "first_loss": losses[0],
             "steps_done": args.steps, "losses": losses,
-            "preempted": False}
+            "preempted": False,
+            "grad_compression": ("pod-boundary"
+                                 if compress_fn is not None else "off")}
 
 
 if __name__ == "__main__":

@@ -1,0 +1,34 @@
+"""Star-query engine over the compact form (no expansion).
+
+The paper's motivation is that frequent star patterns hurt graph size
+AND query processing; this package makes the second half measurable.
+``StarQuery`` describes a star BGP (subject variable, (property,
+object-or-variable) arms, optional class), and :class:`QueryEngine`
+answers it with two provably-equivalent strategies:
+
+    from repro.api import Compactor
+    from repro.query import QueryEngine, StarQuery
+
+    comp = Compactor(); comp.run(store)
+    eng = QueryEngine(comp.fgraph)
+    q = StarQuery(arms=((p_procedure, sensor7), (p_time, None)),
+                  class_id=observation)
+    eng.query(q)                       # factorized: molecule-table match
+    eng.query(q, strategy="raw")       # baseline: index joins on expand()
+    eng.query_batch(qs, backend="device")   # one lowering per stack
+
+``raw`` scales per-arm with AM (every entity repeats every edge);
+``factorized`` scales with AMI (one molecule row answers all of its
+entities through the ``instanceOf`` CSR).  The batched device path
+reuses the sweep engine's bucket ladder and ``sig_hash`` kernels for
+the molecule-match join.  Equivalence of all three is property-tested
+(``tests/test_query.py``) and gated on the bench snapshot.
+"""
+from .batch import (QUERY_EXEC, QueryEngine, match_molecules_batch,  # noqa: F401
+                    reset_query_stats)
+from .star import (Bindings, StarQuery, eval_factorized, eval_raw,  # noqa: F401
+                   match_molecules)
+
+__all__ = ["StarQuery", "Bindings", "QueryEngine", "eval_raw",
+           "eval_factorized", "match_molecules", "match_molecules_batch",
+           "QUERY_EXEC", "reset_query_stats"]

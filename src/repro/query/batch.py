@@ -1,0 +1,196 @@
+"""Batched device star-query evaluation: one lowering per query stack.
+
+The molecule-match join of ``eval_factorized`` -- "which of the class's
+M molecules satisfy this query's ground arms?" -- is exactly the shape
+the candidate-batched sweep engine already compiles: a (M, K) parent
+buffer, a per-candidate column mask, and a row-signature group-by.  This
+module reuses that machinery wholesale:
+
+* the molecule table pads to the same power-of-two ``(m_b, k_b)``
+  bucket (``core.sweep.bucket_rows`` / ``bucket_cols``) and uploads to
+  device ONCE per (engine, class);
+* a stack of Q queries becomes a ``(q_b, k_b)`` 0/1 column-mask stack
+  plus an aligned value stack, chunked at ``MAX_SWEEP_CANDIDATES`` and
+  padded with all-zero no-op rows (``bucket_candidates`` rung);
+* one jitted call computes, per query, the masked molecule signatures
+  (``kernels.ops.row_signature`` -- the Pallas ``sig_hash`` kernel with
+  the query axis as the grid axis, padded rows carrying the shared
+  sentinel) and compares them against the query tuple's own signature:
+  ``(Q, M)`` hit booleans come back from a single lowering.
+
+Signatures are 64-bit hashes, so hits are *verified exactly on host*
+(an O(hits * K) comparison) before members are emitted -- a collision
+can cost a verification, never a wrong answer.  Trace accounting rides
+``core.sweep.TRACE_COUNTS`` under the ``"query"`` kind, so the bench
+snapshot gates zero warm retraces on this path exactly like the sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core.fgraph import FactorizedGraph, MoleculeTable
+from repro.core.sweep import (MAX_SWEEP_CANDIDATES, _note_trace,
+                              bucket_candidates, bucket_cols, bucket_rows)
+
+from .star import Bindings, StarQuery, eval_factorized
+
+# executed-lowering accounting for the batched query path (mirrors
+# core.sweep.EXEC_STATS: one "batch" = one query_batch call)
+QUERY_EXEC = {"lowerings": 0, "batches": 0}
+
+
+def reset_query_stats() -> None:
+    QUERY_EXEC["lowerings"] = 0
+    QUERY_EXEC["batches"] = 0
+
+
+@functools.lru_cache(maxsize=None)
+def _jax():
+    import jax
+    import jax.numpy as jnp
+    return jax, jnp
+
+
+@functools.lru_cache(maxsize=None)
+def _match_fn(use_kernel: bool):
+    """Build (once) the jitted molecule-match over a padded bucket.
+
+    Keyed only by the bucket shape: molecule values, query masks and
+    query values are all traced, so every (class, query stack) pair that
+    lands in the same ``(m_b, k_b, q_b)`` bucket is a jit cache hit.
+    """
+    jax, jnp = _jax()
+    from repro.kernels import ops as kops
+
+    def match(mols, valid, masks, vals):
+        _note_trace("query", mols.shape + (masks.shape[0],))
+        stack = mols[None, :, :] * masks[:, None, :]        # (Q, M, K)
+        sig = kops.row_signature(stack, valid=valid,
+                                 use_kernel=use_kernel)     # (Q, M, 2)
+        qsig = kops.row_signature((vals * masks)[:, None, :],
+                                  use_kernel=use_kernel)    # (Q, 1, 2)
+        return jnp.all(sig == qsig, axis=-1) & valid[None, :]
+
+    return jax.jit(match)
+
+
+class _TableBuffer:
+    """One bucket-padded on-device copy of a class's molecule table."""
+
+    def __init__(self, table: MoleculeTable) -> None:
+        jax, jnp = _jax()
+        m, k = table.objects.shape
+        self.m, self.k = m, k
+        self.m_bucket = bucket_rows(m)
+        self.k_bucket = bucket_cols(k)
+        buf = np.zeros((self.m_bucket, self.k_bucket), np.int32)
+        buf[:m, :k] = table.objects
+        self.dev = jnp.asarray(buf)
+        self.valid = jnp.asarray(np.arange(self.m_bucket) < m)
+
+
+def match_molecules_batch(buf: _TableBuffer, table: MoleculeTable,
+                          arm_stacks: list[list[tuple[int, int]]],
+                          use_kernel: bool = True) -> list[np.ndarray]:
+    """Molecule-table rows matching each query's ground SP arms, for a
+    whole stack of queries in one lowering per candidate chunk."""
+    _, jnp = _jax()
+    n_q = len(arm_stacks)
+    out: list[np.ndarray] = []
+    for lo in range(0, n_q, MAX_SWEEP_CANDIDATES):
+        chunk = arm_stacks[lo:lo + MAX_SWEEP_CANDIDATES]
+        q_b = bucket_candidates(len(chunk))
+        masks = np.zeros((q_b, buf.k_bucket), np.int32)
+        vals = np.zeros((q_b, buf.k_bucket), np.int32)
+        for qi, arms in enumerate(chunk):
+            for p, o in arms:
+                j = table.col_of(p)
+                masks[qi, j] = 1
+                vals[qi, j] = o
+        QUERY_EXEC["lowerings"] += 1
+        hits = np.asarray(_match_fn(use_kernel)(
+            buf.dev, buf.valid, jnp.asarray(masks), jnp.asarray(vals)))
+        for qi, arms in enumerate(chunk):
+            rows = np.flatnonzero(hits[qi, :buf.m])
+            if rows.size and arms:
+                # exact host verification: a signature collision may
+                # only ever cost this check, never a wrong binding
+                ok = np.ones(rows.shape[0], bool)
+                for p, o in arms:
+                    ok &= table.objects[rows, table.col_of(p)] == o
+                rows = rows[ok]
+            out.append(rows)
+    return out
+
+
+class QueryEngine:
+    """Star-query engine over one :class:`FactorizedGraph`.
+
+    ``strategy="factorized"`` evaluates on G' directly;
+    ``strategy="raw"`` evaluates on the expanded plain graph (built
+    lazily, cached) -- the baseline a stock engine would run, and the
+    latency comparison the bench snapshot records.  ``query_batch``
+    with ``backend="device"`` routes every class-constrained query
+    whose ground arms live inside the class's SP through the batched
+    molecule-match lowering; everything else falls back to the host
+    path query-by-query.
+    """
+
+    def __init__(self, fgraph: FactorizedGraph,
+                 raw_store=None, *, use_kernel: bool = True) -> None:
+        self.fgraph = fgraph
+        self._raw = raw_store
+        self.use_kernel = bool(use_kernel)
+        self._bufs: dict[int, _TableBuffer] = {}
+
+    @property
+    def raw_store(self):
+        if self._raw is None:
+            self._raw = self.fgraph.expand()
+        return self._raw
+
+    def query(self, q: StarQuery, strategy: str = "factorized") -> Bindings:
+        from .star import eval_raw
+        if strategy == "factorized":
+            return eval_factorized(self.fgraph, q)
+        if strategy == "raw":
+            return eval_raw(self.raw_store, q)
+        raise ValueError(f"unknown query strategy: {strategy!r}")
+
+    def _buffer(self, class_id: int) -> _TableBuffer:
+        buf = self._bufs.get(class_id)
+        if buf is None:
+            buf = _TableBuffer(self.fgraph.tables[class_id])
+            self._bufs[class_id] = buf
+        return buf
+
+    def query_batch(self, queries, strategy: str = "factorized",
+                    backend: str = "host") -> list[Bindings]:
+        queries = list(queries)
+        if strategy != "factorized" or backend != "device":
+            return [self.query(q, strategy) for q in queries]
+        QUERY_EXEC["batches"] += 1
+        out: list[Bindings | None] = [None] * len(queries)
+        # group device-eligible queries per class: the whole group's
+        # molecule match runs in one lowering per chunk
+        groups: dict[int, list[int]] = {}
+        for i, q in enumerate(queries):
+            table = self.fgraph.tables.get(int(q.class_id)) \
+                if q.class_id is not None else None
+            if table is not None and table.n_molecules and all(
+                    table.col_of(p) is not None
+                    for p, o in q.ground_arms):
+                groups.setdefault(int(q.class_id), []).append(i)
+            else:
+                out[i] = eval_factorized(self.fgraph, q)
+        for cid, idxs in groups.items():
+            table = self.fgraph.tables[cid]
+            stacks = [queries[i].ground_arms for i in idxs]
+            rows = match_molecules_batch(self._buffer(cid), table, stacks,
+                                         use_kernel=self.use_kernel)
+            for i, r in zip(idxs, rows):
+                out[i] = eval_factorized(self.fgraph, queries[i],
+                                         _mol_rows=r)
+        return out  # type: ignore[return-value]

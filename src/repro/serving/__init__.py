@@ -2,5 +2,6 @@
 to shared-prefix KV caches."""
 from .prefix_factorization import (  # noqa: F401
     PrefixPlan, plan_prefix_sharing, prefix_edges_cost)
-from .engine import (Engine, PREFIX_POLICIES, PrefixPolicy,  # noqa: F401
+from .engine import (Engine, GraphQueryRequest, GraphQueryResponse,  # noqa: F401
+                     GraphQueryService, PREFIX_POLICIES, PrefixPolicy,
                      Request)

@@ -69,6 +69,107 @@ class Request:
     out: list = dataclasses.field(default_factory=list)
 
 
+# -- graph-query endpoint -----------------------------------------------------
+
+@dataclasses.dataclass
+class GraphQueryRequest:
+    """One star BGP at the term level: ``arms`` are (property term,
+    object term or None-for-variable) pairs, plus an optional class."""
+
+    rid: int
+    arms: tuple[tuple[str, str | None], ...]
+    class_term: str | None = None
+    strategy: str = "factorized"     # "factorized" | "raw"
+
+
+@dataclasses.dataclass
+class GraphQueryResponse:
+    rid: int
+    subjects: list[str]
+    var_props: tuple[str, ...]
+    var_objects: list[tuple[str, ...]]   # aligned with subjects
+    strategy: str
+    n_rows: int
+
+
+class GraphQueryService:
+    """Star-query endpoint over a compacted graph (the paper's "queries
+    get faster on G'" claim, served).
+
+    Wraps a ``repro.query.QueryEngine`` with the same queue/run shape as
+    the LM :class:`Engine`: requests accumulate via :meth:`submit`, and
+    :meth:`run` drains the queue -- class-constrained in-SP queries of
+    one wave ride the batched device molecule-match lowering when
+    ``backend="device"``, everything else evaluates on host.  Terms
+    unknown to the dictionary yield empty binding sets (nothing can
+    match a term the graph has never seen).
+    """
+
+    def __init__(self, fgraph, *, backend: str = "host",
+                 use_kernel: bool = True):
+        from repro.query import QueryEngine
+        self.fgraph = fgraph
+        self.backend = backend
+        self.engine = QueryEngine(fgraph, use_kernel=use_kernel)
+        self.queue: list[GraphQueryRequest] = []
+
+    def submit(self, req: GraphQueryRequest) -> None:
+        self.queue.append(req)
+
+    def _compile(self, req: GraphQueryRequest):
+        from repro.query import StarQuery
+        d = self.fgraph.store.dict
+        cid = None
+        if req.class_term is not None:
+            cid = d.lookup(req.class_term)
+            if cid is None:
+                return None
+        arms = []
+        for p, o in req.arms:
+            pid = d.lookup(p)
+            if pid is None:
+                return None
+            if o is None:
+                arms.append((pid, None))
+            else:
+                oid = d.lookup(o)
+                if oid is None:
+                    return None
+                arms.append((pid, oid))
+        return StarQuery(arms=tuple(arms), class_id=cid)
+
+    def run(self) -> dict[int, GraphQueryResponse]:
+        batch, self.queue = self.queue, []
+        if not batch:
+            return {}
+        term = self.fgraph.store.dict.term
+        compiled = [(req, self._compile(req)) for req in batch]
+        # factorized queries of the wave evaluate as ONE batch (device
+        # backend: one molecule-match lowering per class chunk)
+        fact = [(req, q) for req, q in compiled
+                if q is not None and req.strategy == "factorized"]
+        results = self.engine.query_batch([q for _, q in fact],
+                                          backend=self.backend)
+        by_rid = {req.rid: b for (req, _), b in zip(fact, results)}
+        out: dict[int, GraphQueryResponse] = {}
+        for req, q in compiled:
+            if q is None:
+                out[req.rid] = GraphQueryResponse(
+                    req.rid, [], (), [], req.strategy, 0)
+                continue
+            b = by_rid.get(req.rid)
+            if b is None:                       # raw strategy, host only
+                b = self.engine.query(q, strategy=req.strategy)
+            out[req.rid] = GraphQueryResponse(
+                rid=req.rid,
+                subjects=[term(int(s)) for s in b.subjects],
+                var_props=tuple(term(int(p)) for p in b.var_props),
+                var_objects=[tuple(term(int(v)) for v in row)
+                             for row in b.var_objects],
+                strategy=req.strategy, n_rows=b.n_rows)
+        return out
+
+
 class Engine:
     def __init__(self, model, params, *, cache_len: int = 512,
                  chunk: int = 64, ctx: Ctx | None = None,

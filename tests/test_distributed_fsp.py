@@ -71,3 +71,34 @@ def test_factorized_store_property(n, m, seed):
     st_ = FactorizedStore.build(rows)
     np.testing.assert_array_equal(st_.batch(np.arange(n)), rows)
     assert st_.bytes_stored <= st_.bytes_original
+
+
+def test_factorized_store_batch_sends_unique_molecules_once():
+    """The device-transfer payload of a batch is one copy of each
+    distinct molecule the batch references -- not one row per sample."""
+    rng = np.random.default_rng(7)
+    base = rng.integers(0, 100, (6, 16), dtype=np.int32)
+    rows = base[rng.integers(0, 6, (300,))]
+    st_ = FactorizedStore.build(rows)
+    idx = rng.integers(0, 300, (64,))
+    mols, inv = st_.batch_parts(idx)
+    # payload rows are pairwise distinct and exactly the referenced set
+    assert np.unique(mols, axis=0).shape[0] == mols.shape[0]
+    assert mols.shape[0] == np.unique(st_.instance_of[idx]).shape[0]
+    assert mols.shape[0] <= 6 < idx.shape[0]
+    np.testing.assert_array_equal(mols[inv], rows[idx])
+    np.testing.assert_array_equal(st_.batch(idx), rows[idx])
+    # device path: same values, expansion happens after the transfer
+    jnp_batch = st_.batch(idx, device=True)
+    np.testing.assert_array_equal(np.asarray(jnp_batch), rows[idx])
+
+
+def test_factorized_store_batch_parts_flat_fallback():
+    rng = np.random.default_rng(8)
+    rows = rng.integers(0, 1 << 30, (40, 8), dtype=np.int32)  # all unique
+    st_ = FactorizedStore.build(rows)
+    assert st_.flat is not None
+    idx = rng.integers(0, 40, (16,))
+    mols, inv = st_.batch_parts(idx)
+    np.testing.assert_array_equal(mols[inv], rows[idx])
+    np.testing.assert_array_equal(st_.batch(idx, device=True), rows[idx])

@@ -1,0 +1,296 @@
+"""FactorizedGraph: lossless expand, Def. 4.8 accounting, molecule
+tables committed by the Compactor, and delete support (membership
+dissolution + payoff decompaction)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.api import Compactor
+from repro.core import FactorizedGraph, factorize_classes, semantic_triples
+from repro.core.star import num_edges
+from repro.core.triples import TripleStore
+from repro.data.synthetic import (SensorGraphSpec, generate,
+                                  property_set_ids)
+
+
+def _sensor(n=300, seed=3, **kw):
+    return generate(SensorGraphSpec(n_observations=n, seed=seed, **kw))
+
+
+def _compact(store, **kw):
+    comp = Compactor(**kw)
+    comp.run(store)
+    return comp
+
+
+# ---------------------------------------------------------------------------
+# structure + losslessness
+# ---------------------------------------------------------------------------
+
+def test_expand_reconstructs_original_graph_exactly():
+    store = _sensor(250, seed=5)
+    comp = _compact(store)
+    fg = comp.fgraph
+    assert len(fg.tables) == 2
+    fg.validate()
+    np.testing.assert_array_equal(fg.expand().spo, store.spo)
+
+
+def test_tables_align_with_factorization_results():
+    store = _sensor(200, seed=9)
+    cid, a8 = property_set_ids(store, "A8")
+    g, results = factorize_classes(store, [(cid, a8)])
+    fg = FactorizedGraph.from_compaction(g, results)
+    t = fg.tables[cid]
+    assert t.props == tuple(sorted(a8))
+    assert t.n_molecules == len(results[0].surrogates)
+    # sig map inverts the objects matrix
+    for row, sg in zip(t.objects.tolist(), t.surrogates.tolist()):
+        assert t.sig[tuple(row)] == sg
+    # every entity of the class is a member of exactly one molecule
+    assert int(fg.support(cid).sum()) == \
+        store.entities_of_class(cid).shape[0]
+
+
+def test_def48_edges_matches_detection_objective():
+    store = _sensor(400, seed=11)
+    comp = Compactor()
+    rep = comp.run(store)
+    for cid, det in rep.detections.items():
+        # |S| measured from the structure (SP + residual raw props)
+        # equals the detection-time |S|, so the realized Def. 4.8
+        # objective is reproducible from the tables alone
+        got = comp.fgraph.def48_edges(cid)
+        assert got == det.edges
+        t = comp.fgraph.tables[cid]
+        am = int(comp.fgraph.support(cid).sum())
+        assert got == num_edges(t.n_molecules, am, t.k,
+                                t.k + comp.fgraph.residual_props(cid).size)
+
+
+def test_members_of_vectorized_matches_scalar():
+    store = _sensor(150, seed=2)
+    fg = _compact(store).fgraph
+    for t in fg.tables.values():
+        ents, src = fg.members_of(t.surrogates)
+        for r in range(t.n_molecules):
+            np.testing.assert_array_equal(
+                np.sort(ents[src == r]),
+                np.sort(fg.members(int(t.surrogates[r]))))
+
+
+def test_update_extends_molecule_tables():
+    store = _sensor(200, seed=13, include_result_links=False)
+    comp = _compact(store)
+    cid = store.dict.lookup("ssn:Observation")
+    before = comp.fgraph.tables[cid].n_molecules
+    up = comp.update([("obs/x", "rdf:type", "ssn:Observation"),
+                      ("obs/x", "ssn:observedProperty", "phenom/NEW"),
+                      ("obs/x", "ssn:procedure", "sensor/brand-new"),
+                      ("obs/x", "ssn:generatedBy", "sensor/brand-new")])
+    assert up.n_new_surrogates == 1
+    t = comp.fgraph.tables[cid]
+    assert t.n_molecules == before + 1
+    comp.fgraph.validate()
+    # the fresh molecule is queryable through the committed structure
+    e = comp.graph.dict.lookup("obs/x")
+    assert any(e in comp.fgraph.members(int(s)).tolist()
+               for s in t.surrogates)
+
+
+# ---------------------------------------------------------------------------
+# deletes
+# ---------------------------------------------------------------------------
+
+def _delete_ref(store, rows=None, ents=None):
+    """Reference semantics: the same delete applied to the raw graph."""
+    spo = store.spo
+    keep = np.ones(spo.shape[0], bool)
+    if rows is not None:
+        for s, p, o in np.asarray(rows).reshape(-1, 3).tolist():
+            keep &= ~((spo[:, 0] == s) & (spo[:, 1] == p) & (spo[:, 2] == o))
+    if ents is not None:
+        keep &= ~np.isin(spo[:, 0], ents) & ~np.isin(spo[:, 2], ents)
+    return TripleStore.from_ids(store.dict, spo[keep], presorted=True)
+
+
+def test_delete_raw_residual_triple_keeps_molecules():
+    store = _sensor(300, seed=4)
+    comp = _compact(store)
+    cid = store.dict.lookup("ssn:Observation")
+    # observationResult is never in the detected SP: a raw residual edge
+    pr = store.dict.lookup("ssn:observationResult")
+    row = store.spo[store.spo[:, 1] == pr][0]
+    n_mol = comp.fgraph.tables[cid].n_molecules
+    rep = comp.delete(triples=row[None, :])
+    assert rep.stats.n_raw_removed == 1 and rep.stats.n_exits == 0
+    assert comp.fgraph.tables[cid].n_molecules == n_mol
+    np.testing.assert_array_equal(comp.fgraph.expand().spo,
+                                  _delete_ref(store, rows=row[None, :]).spo)
+
+
+def test_delete_molecule_arm_dissolves_membership():
+    store = _sensor(200, seed=6)
+    comp = _compact(store)
+    fg = comp.fgraph
+    cid = store.dict.lookup("ssn:Observation")
+    t = fg.tables[cid]
+    ents, objmat = store.object_matrix(cid, t.props)
+    e0 = int(ents[0])
+    arm = [e0, t.props[0], int(objmat[0, 0])]
+    rep = comp.delete(triples=np.asarray(arm)[None, :])
+    assert rep.stats.n_exits == 1
+    fg2 = comp.fgraph
+    # the entity left its molecule: no instanceOf, surviving arms raw
+    assert not any(e0 in fg2.members(int(sg)).tolist()
+                   for sg in fg2.surrogate_ids.tolist())
+    np.testing.assert_array_equal(
+        fg2.expand().spo, _delete_ref(store, rows=[arm]).spo)
+    fg2.validate()
+
+
+def test_delete_type_edge_of_absorbed_entity():
+    store = _sensor(200, seed=8)
+    comp = _compact(store)
+    cid = store.dict.lookup("ssn:Observation")
+    t = comp.fgraph.tables[cid]
+    ents, _ = store.object_matrix(cid, t.props)
+    e0 = int(ents[0])
+    row = [e0, store.TYPE, cid]
+    comp.delete(triples=np.asarray(row)[None, :])
+    np.testing.assert_array_equal(
+        comp.fgraph.expand().spo, _delete_ref(store, rows=[row]).spo)
+
+
+def test_delete_missing_triple_is_noop():
+    store = _sensor(100, seed=10)
+    comp = _compact(store)
+    before = comp.graph.spo.copy()
+    rep = comp.delete(triples=np.asarray([[1, 2, 3]], np.int32))
+    assert rep.stats.n_raw_removed == 0 and rep.stats.n_exits == 0
+    np.testing.assert_array_equal(comp.graph.spo, before)
+
+
+def test_delete_storage_artifacts_rejected():
+    store = _sensor(100, seed=12)
+    comp = _compact(store)
+    fg = comp.fgraph
+    sg = int(fg.surrogate_ids[0])
+    sg_row = fg.store.spo[fg.store.spo[:, 0] == sg][0]
+    with pytest.raises(ValueError, match="surrogate"):
+        fg.delete_triples(sg_row[None, :])
+    inst = fg.store.spo[fg.store.spo[:, 1] == fg.store.INSTANCE_OF][0]
+    with pytest.raises(ValueError, match="instanceOf"):
+        fg.delete_triples(inst[None, :])
+    with pytest.raises(ValueError, match="surrogate"):
+        fg.delete_entities([sg])
+
+
+def test_payoff_decompaction_below_support_two():
+    """A molecule of 3 members survives one exit (support 2 still pays),
+    then decompacts in place when support drops to 1."""
+    t = []
+    for i in range(3):
+        t += [(f"e{i}", "rdf:type", "C"), (f"e{i}", "p1", "x"),
+              (f"e{i}", "p2", "y"), (f"e{i}", "q", f"u{i}")]
+    store = TripleStore.from_triples(t)
+    C = store.dict.lookup("C")
+    p1, p2 = store.dict.lookup("p1"), store.dict.lookup("p2")
+    comp = Compactor(min_predicted_savings=-10_000)
+    from repro.api import CompactionPlan
+    comp.execute(store, CompactionPlan.explicit([(C, (p1, p2))]))
+    fg = comp.fgraph
+    assert fg.tables[C].n_molecules == 1
+    x = store.dict.lookup("x")
+    e0, e1 = store.dict.lookup("e0"), store.dict.lookup("e1")
+    rep1 = comp.delete(triples=[["e0", "p1", "x"]])
+    assert rep1.stats.n_exits == 1
+    assert comp.fgraph.tables[C].n_molecules == 1     # support 2: stays
+    rep2 = comp.delete(triples=[["e1", "p1", "x"]])
+    assert comp.fgraph.tables[C].n_molecules == 0     # support 1: decompacts
+    assert rep2.stats.n_molecules_removed == 1
+    assert rep2.stats.n_decompacted == 1              # e2 re-materialized
+    ref = _delete_ref(store, rows=[[e0, p1, x], [e1, p1, x]])
+    np.testing.assert_array_equal(comp.fgraph.expand().spo, ref.spo)
+    # no surrogates survive for C; e2's star is raw again
+    assert not in_graph_instanceof(comp.graph)
+
+
+def in_graph_instanceof(g) -> bool:
+    return bool((g.spo[:, 1] == g.INSTANCE_OF).any())
+
+
+def test_delete_entity_invalidates_referencing_molecules():
+    """Deleting an entity that appears as a molecule *arm object*
+    invalidates the molecule: members keep the surviving arms raw."""
+    store = _sensor(200, seed=14)
+    comp = _compact(store)
+    cid = store.dict.lookup("ssn:Observation")
+    t = comp.fgraph.tables[cid]
+    victim = int(t.objects[0, 0])          # an arm object of molecule 0
+    assert victim not in comp.fgraph.surrogate_ids.tolist()
+    rep = comp.delete(entities=np.asarray([victim]))
+    assert rep.stats.n_molecules_removed >= 1
+    ref = _delete_ref(store, ents=[victim])
+    np.testing.assert_array_equal(comp.fgraph.expand().spo, ref.spo)
+    comp.fgraph.validate()
+
+
+def test_delete_member_entity_shrinks_support():
+    store = _sensor(300, seed=16)
+    comp = _compact(store)
+    cid = store.dict.lookup("ssn:Observation")
+    fg = comp.fgraph
+    # pick a molecule with >= 3 members so the payoff sweep keeps it
+    sup = fg.support(cid)
+    r = int(np.argmax(sup))
+    assert sup[r] >= 3
+    sg = int(fg.tables[cid].surrogates[r])
+    e0 = int(fg.members(sg)[0])
+    rep = comp.delete(entities=np.asarray([e0]))
+    fg2 = comp.fgraph
+    assert int(fg2.support(cid)[list(fg2.tables[cid].surrogates).index(sg)]
+               if sg in fg2.tables[cid].surrogates else -1) == sup[r] - 1
+    ref = _delete_ref(store, ents=[e0])
+    np.testing.assert_array_equal(fg2.expand().spo, ref.spo)
+
+
+def test_delete_is_transactional_on_compactor():
+    store = _sensor(150, seed=18)
+    comp = _compact(store)
+    before = comp.graph.spo.copy()
+    fg_before = comp.fgraph
+    bad = np.asarray([[int(fg_before.surrogate_ids[0]), 0, 0]], np.int32)
+    with pytest.raises(ValueError):
+        comp.delete(triples=bad)
+    assert comp.fgraph is fg_before
+    np.testing.assert_array_equal(comp.graph.spo, before)
+
+
+def test_semantic_triples_preserved_through_delete_and_update():
+    store = _sensor(250, seed=20, include_result_links=False)
+    comp = _compact(store)
+    cid = store.dict.lookup("ssn:Observation")
+    t = comp.fgraph.tables[cid]
+    ents, objmat = store.object_matrix(cid, t.props)
+    comp.delete(triples=np.asarray(
+        [[int(ents[3]), t.props[0], int(objmat[3, 0])]]))
+    comp.update([("obs/z", "rdf:type", "ssn:Observation"),
+                 ("obs/z", "ssn:observedProperty", "phenom/Temperature"),
+                 ("obs/z", "ssn:procedure", "sensor/1"),
+                 ("obs/z", "ssn:generatedBy", "sensor/1")])
+    # the factorized graph's semantic content equals the same edits
+    # applied to the raw graph
+    raw = _delete_ref(store, rows=[[int(ents[3]), t.props[0],
+                                    int(objmat[3, 0])]])
+    d = raw.dict
+    raw.add_ids(np.asarray(
+        [[d.id("obs/z"), d.id("rdf:type"), d.id("ssn:Observation")],
+         [d.id("obs/z"), d.id("ssn:observedProperty"),
+          d.id("phenom/Temperature")],
+         [d.id("obs/z"), d.id("ssn:procedure"), d.id("sensor/1")],
+         [d.id("obs/z"), d.id("ssn:generatedBy"), d.id("sensor/1")]],
+        np.int32))
+    a, b = semantic_triples(raw), semantic_triples(comp.graph)
+    assert a.shape == b.shape and (a == b).all()

@@ -1,0 +1,311 @@
+"""Star-query engine: factorized <-> raw <-> original-graph parity
+(unit + hypothesis property tests), the batched device molecule match,
+and the serving endpoint."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import Compactor
+from repro.core import sweep as core_sweep
+from repro.core.triples import TripleStore
+from repro.data.synthetic import SensorGraphSpec, generate
+from repro.query import (QUERY_EXEC, QueryEngine, StarQuery,
+                         eval_factorized, eval_raw, reset_query_stats)
+
+
+def _sensor(n=300, seed=7, **kw):
+    return generate(SensorGraphSpec(n_observations=n, seed=seed, **kw))
+
+
+def _compact(store, **kw):
+    comp = Compactor(**kw)
+    comp.run(store)
+    return comp
+
+
+def _assert_triple_parity(fg, store, q):
+    """factorized-on-G' == raw-on-expand() == raw-on-original-G."""
+    bf = eval_factorized(fg, q)
+    br = eval_raw(fg.expand(), q)
+    b0 = eval_raw(store, q)
+    assert bf.same_as(br), q
+    assert br.same_as(b0), q
+    return bf
+
+
+# ---------------------------------------------------------------------------
+# unit parity
+# ---------------------------------------------------------------------------
+
+def test_ground_arm_molecule_lookup_parity():
+    store = _sensor()
+    comp = _compact(store)
+    fg = comp.fgraph
+    for cid, t in fg.tables.items():
+        for r in (0, t.n_molecules // 2, t.n_molecules - 1):
+            q = StarQuery(arms=tuple(
+                (p, int(o)) for p, o in zip(t.props, t.objects[r])),
+                class_id=cid)
+            b = _assert_triple_parity(fg, store, q)
+            assert b.n_rows == fg.members(int(t.surrogates[r])).shape[0]
+
+
+def test_variable_arm_and_residual_arm_parity():
+    store = _sensor()
+    fg = _compact(store).fgraph
+    cid = store.dict.lookup("ssn:Observation")
+    t = fg.tables[cid]
+    row = t.objects[0]
+    pr = store.dict.lookup("ssn:observationResult")   # residual (non-SP)
+    queries = [
+        StarQuery(arms=((t.props[0], int(row[0])), (t.props[-1], None)),
+                  class_id=cid),
+        StarQuery(arms=((t.props[0], None),), class_id=cid),
+        StarQuery(arms=((t.props[0], int(row[0])), (pr, None)),
+                  class_id=cid),
+        StarQuery(arms=((t.props[0], int(row[0])),)),          # no class
+        StarQuery(arms=(), class_id=cid),                       # class scan
+        StarQuery(arms=((t.props[0], 10**6),), class_id=cid),   # miss
+    ]
+    for q in queries:
+        _assert_triple_parity(fg, store, q)
+
+
+def test_query_without_class_or_arm_rejected():
+    fg = _compact(_sensor(80)).fgraph
+    with pytest.raises(ValueError):
+        eval_factorized(fg, StarQuery(arms=()))
+    with pytest.raises(ValueError):
+        eval_raw(fg.expand(), StarQuery(arms=()))
+
+
+def test_unfactorized_class_falls_back_to_raw_triples():
+    """Classes the planner skipped have no molecule table; the factorized
+    strategy must still answer queries about them."""
+    t = [(f"e{i}", "rdf:type", "Rare") for i in range(3)]
+    t += [(f"e{i}", "p", f"u{i}") for i in range(3)]     # all distinct
+    store = TripleStore.from_triples(t)
+    comp = Compactor()
+    comp.run(store)        # nothing factorizes (overhead case)
+    fg = comp.fgraph
+    assert not fg.tables
+    cid = store.dict.lookup("Rare")
+    p = store.dict.lookup("p")
+    q = StarQuery(arms=((p, store.dict.lookup("u1")),), class_id=cid)
+    b = _assert_triple_parity(fg, store, q)
+    assert b.n_rows == 1
+
+
+def test_multi_typed_entity_cross_class_arms():
+    """An entity absorbed into TWO classes: a query about class A with an
+    arm whose property lives in class B's SP must follow the instanceOf
+    rewriting through B's molecule."""
+    t = []
+    for i in range(3):
+        e = f"e{i}"
+        t += [(e, "rdf:type", "A"), (e, "rdf:type", "B"),
+              (e, "p1", "x"), (e, "p2", "y"),
+              (e, "q1", "v"), (e, "q2", "w")]
+    for i in range(3, 5):
+        e = f"e{i}"
+        t += [(e, "rdf:type", "B"), (e, "q1", "v"), (e, "q2", "w")]
+    store = TripleStore.from_triples(t)
+    comp = Compactor(min_predicted_savings=-10_000)
+    comp.run(store)
+    fg = comp.fgraph
+    d = store.dict
+    A, B = d.lookup("A"), d.lookup("B")
+    assert A in fg.tables and B in fg.tables
+    # class A + q1 arm (q1 in B's SP): e0..e2 answer through B molecules
+    q = StarQuery(arms=((d.lookup("q1"), d.lookup("v")),), class_id=A)
+    b = _assert_triple_parity(fg, store, q)
+    assert b.n_rows == 3
+    # class B + p1 variable arm: only the multi-typed members bind
+    q2 = StarQuery(arms=((d.lookup("p1"), None),), class_id=B)
+    b2 = _assert_triple_parity(fg, store, q2)
+    assert b2.n_rows == 3
+
+
+def test_query_parity_after_deletes():
+    store = _sensor(250, seed=9)
+    comp = _compact(store)
+    cid = store.dict.lookup("ssn:Observation")
+    t = comp.fgraph.tables[cid]
+    ents, objmat = store.object_matrix(cid, t.props)
+    comp.delete(triples=np.asarray(
+        [[int(ents[0]), t.props[0], int(objmat[0, 0])],
+         [int(ents[7]), store.TYPE, cid]]))
+    comp.delete(entities=np.asarray([int(ents[12])]))
+    fg = comp.fgraph
+    raw = fg.expand()
+    row = t.objects[0]
+    for q in (
+            StarQuery(arms=tuple((p, int(o))
+                                 for p, o in zip(t.props, row)),
+                      class_id=cid),
+            StarQuery(arms=((t.props[0], int(row[0])),
+                            (t.props[-1], None)), class_id=cid),
+            StarQuery(arms=(), class_id=cid)):
+        assert eval_factorized(fg, q).same_as(eval_raw(raw, q)), q
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random graphs x random queries x random edits
+# ---------------------------------------------------------------------------
+
+def _random_graph(rng, n_ent, n_props, n_obj, n_cls):
+    """Random small RDF graph: multi-typed entities, incomplete molecules
+    (missing arms), shared and distinct object tuples."""
+    triples = []
+    for i in range(n_ent):
+        e = f"e{i}"
+        for c in range(n_cls):
+            if c == 0 or rng.random() < 0.4:       # multi-typed sometimes
+                triples.append((e, "rdf:type", f"C{c}"))
+        for p in range(n_props):
+            if rng.random() < 0.85:                # incomplete sometimes
+                triples.append((e, f"p{p}", f"o{rng.integers(0, n_obj)}"))
+    return TripleStore.from_triples(triples)
+
+
+def _random_query(rng, store, n_props, n_obj, n_cls):
+    arms = []
+    n_arms = int(rng.integers(1, min(n_props, 3) + 1))
+    for p in rng.choice(n_props, size=n_arms, replace=False):
+        pid = store.dict.lookup(f"p{p}")
+        if pid is None:
+            continue
+        if rng.random() < 0.35:
+            arms.append((pid, None))               # variable object
+        else:
+            o = store.dict.lookup(f"o{rng.integers(0, n_obj + 1)}")
+            if o is None:
+                continue                           # miss-by-unknown-term
+            arms.append((pid, o))
+    cid = None
+    if rng.random() < 0.7:
+        cid = store.dict.lookup(f"C{rng.integers(0, n_cls)}")
+    if not arms and cid is None:
+        return None
+    return StarQuery(arms=tuple(arms), class_id=cid)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_ent=st.integers(2, 14), n_props=st.integers(2, 4),
+       n_obj=st.integers(1, 3), n_cls=st.integers(1, 2),
+       seed=st.integers(0, 10_000), with_deletes=st.booleans())
+def test_query_expand_parity_property(n_ent, n_props, n_obj, n_cls, seed,
+                                      with_deletes):
+    """EVERY star query answered on the FactorizedGraph equals the same
+    query on expand() and on the original graph (with the same edits
+    applied raw) -- including variable-object arms, multi-typed
+    entities, incomplete molecules, and post-delete states."""
+    rng = np.random.default_rng(seed)
+    store = _random_graph(rng, n_ent, n_props, n_obj, n_cls)
+    comp = Compactor(min_predicted_savings=-10**9)
+    comp.run(store)
+    reference = store
+    if with_deletes and store.n_triples:
+        k = int(rng.integers(1, min(4, store.n_triples) + 1))
+        rows = store.spo[rng.choice(store.n_triples, size=k,
+                                    replace=False)]
+        comp.delete(triples=rows)
+        keep = np.ones(store.n_triples, bool)
+        for s, p, o in rows.tolist():
+            keep &= ~((store.spo[:, 0] == s) & (store.spo[:, 1] == p) &
+                      (store.spo[:, 2] == o))
+        reference = TripleStore.from_ids(store.dict, store.spo[keep],
+                                         presorted=True)
+    fg = comp.fgraph
+    expanded = fg.expand()
+    np.testing.assert_array_equal(expanded.spo, reference.spo)
+    for _ in range(6):
+        q = _random_query(rng, store, n_props, n_obj, n_cls)
+        if q is None:
+            continue
+        bf = eval_factorized(fg, q)
+        br = eval_raw(expanded, q)
+        b0 = eval_raw(reference, q)
+        assert bf.same_as(br), (q, bf.canonical(), br.canonical())
+        assert br.same_as(b0), (q, br.canonical(), b0.canonical())
+
+
+# ---------------------------------------------------------------------------
+# batched device path
+# ---------------------------------------------------------------------------
+
+def test_query_batch_device_matches_host():
+    pytest.importorskip("jax")
+    store = _sensor(400, seed=5)
+    eng = QueryEngine(_compact(store).fgraph)
+    fg = eng.fgraph
+    queries = []
+    for cid, t in fg.tables.items():
+        for row in t.objects:
+            queries.append(StarQuery(
+                arms=tuple((p, int(o)) for p, o in zip(t.props, row)),
+                class_id=cid))
+        queries.append(StarQuery(          # var arm rides the same batch
+            arms=((t.props[0], int(t.objects[0, 0])), (t.props[-1], None)),
+            class_id=cid))
+    queries.append(StarQuery(arms=((fg.tables[cid].props[0], 10**6),),
+                             class_id=cid))                     # miss
+    host = eng.query_batch(queries, backend="host")
+    dev = eng.query_batch(queries, backend="device")
+    assert len(host) == len(dev) == len(queries)
+    for h, d in zip(host, dev):
+        assert h.same_as(d)
+
+
+def test_query_batch_one_lowering_per_chunk_no_warm_retrace():
+    pytest.importorskip("jax")
+    store = _sensor(300, seed=6)
+    eng = QueryEngine(_compact(store).fgraph)
+    fg = eng.fgraph
+    cid, t = next(iter(fg.tables.items()))
+    queries = [StarQuery(
+        arms=tuple((p, int(o)) for p, o in zip(t.props, row)),
+        class_id=cid) for row in t.objects]
+    assert len(queries) <= core_sweep.MAX_SWEEP_CANDIDATES
+    core_sweep.reset_trace_stats()
+    reset_query_stats()
+    eng.query_batch(queries, backend="device")
+    assert QUERY_EXEC["lowerings"] == 1          # one class, one chunk
+    cold = core_sweep.trace_count()
+    eng.query_batch(queries, backend="device")
+    assert QUERY_EXEC["lowerings"] == 2
+    assert core_sweep.trace_count() == cold      # warm pass: zero retraces
+
+
+def test_graph_query_service_endpoint():
+    from repro.serving import GraphQueryRequest, GraphQueryService
+    store = _sensor(200, seed=8)
+    fg = _compact(store).fgraph
+    cid, t = next(iter(sorted(fg.tables.items())))
+    term = store.dict.term
+    row = t.objects[0]
+    reqs = [
+        GraphQueryRequest(rid=0, arms=tuple(
+            (term(p), term(int(o))) for p, o in zip(t.props, row)),
+            class_term=term(cid)),
+        GraphQueryRequest(rid=1, arms=((term(t.props[0]), None),),
+                          class_term=term(cid)),
+        GraphQueryRequest(rid=2, arms=(("no:such:prop", "x"),),
+                          class_term=term(cid)),
+    ]
+    outs = {}
+    for strategy in ("factorized", "raw"):
+        svc = GraphQueryService(fg)
+        for r in reqs:
+            import dataclasses
+            svc.submit(dataclasses.replace(r, strategy=strategy))
+        outs[strategy] = svc.run()
+    for rid in (0, 1, 2):
+        a, b = outs["factorized"][rid], outs["raw"][rid]
+        assert sorted(a.subjects) == sorted(b.subjects)
+        assert sorted(a.var_objects) == sorted(b.var_objects)
+    assert outs["factorized"][2].n_rows == 0          # unknown term
+    assert outs["factorized"][0].n_rows > 0
+    assert set(outs["factorized"][1].var_props) == {term(t.props[0])}

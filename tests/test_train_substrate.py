@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch, reduced
 from repro.dist.compression import (compressed, dequantize_int8,
-                                    quantize_int8)
+                                    make_pod_compress_fn, quantize_int8)
 from repro.models.blocks import Ctx
 from repro.models.common import (causal_cross_entropy,
                                  causal_cross_entropy_ref)
@@ -152,3 +152,87 @@ def test_error_feedback_residual_carried():
     _, state = opt.update(g, state, params, jnp.int32(0))
     # ...but the residual keeps them for later steps
     assert float(jnp.abs(state["ef"]["w"]).sum()) > 0
+
+
+# -- pod-boundary compression routing ----------------------------------------
+
+def test_pod_compress_fn_engages_only_across_pods():
+    """No pod boundary -> None (intra-pod grads MUST stay uncompressed);
+    a real boundary -> exactly the int8 codec round the DCN hop carries."""
+    import types
+    assert make_pod_compress_fn() is None
+    assert make_pod_compress_fn(n_pods=1) is None
+    no_pod = types.SimpleNamespace(axis_names=("data", "model"),
+                                   devices=np.zeros((4, 2)))
+    assert make_pod_compress_fn(no_pod) is None
+    one_pod = types.SimpleNamespace(axis_names=("pod", "data"),
+                                    devices=np.zeros((1, 8)))
+    assert make_pod_compress_fn(one_pod) is None
+    two_pods = types.SimpleNamespace(axis_names=("pod", "data"),
+                                     devices=np.zeros((2, 4)))
+    fn = make_pod_compress_fn(two_pods)
+    assert fn is not None
+    assert make_pod_compress_fn(n_pods=2) is not None
+    g = {"w": jnp.asarray([[0.5, -3.0, 1e-5], [7.0, 0.0, -0.25]],
+                          jnp.float32)}
+    out = fn(g)
+    np.testing.assert_array_equal(
+        np.asarray(out["w"]),
+        np.asarray(dequantize_int8(*quantize_int8(g["w"]))))
+
+
+def test_train_step_hook_intra_pod_grads_uncompressed():
+    """Routing --compress-grads through the compress_fn hook: with no pod
+    boundary the step function is bit-identical to the uncompressed
+    baseline; with a boundary the optimizer sees exactly the int8
+    codec's output of the raw gradients."""
+    cfg = reduced(get_arch("qwen2-0.5b"), grad_accum=1)
+    model = LM(cfg)
+    ctx = Ctx(cfg=cfg)
+    captured = {}
+
+    def capture_opt(tag):
+        def init(params):
+            return {}
+
+        def update(grads, state, params, step):
+            captured[tag] = grads
+            return params, state
+        return Optimizer(init, update)
+
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (2, 16), 1,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+    for tag, fn in (("plain", None),
+                    ("intra", make_pod_compress_fn(n_pods=1)),
+                    ("cross", make_pod_compress_fn(n_pods=2))):
+        step = make_train_step(model, capture_opt(tag), ctx=ctx,
+                               compress_fn=fn)
+        state = init_train_state(model, capture_opt(tag),
+                                 jax.random.PRNGKey(1))
+        step(state, batch)
+    plain = jax.tree.leaves(captured["plain"])
+    intra = jax.tree.leaves(captured["intra"])
+    cross = jax.tree.leaves(captured["cross"])
+    for a, b in zip(plain, intra):       # no boundary: bit-identical
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    saw_change = False
+    for a, c in zip(plain, cross):       # boundary: the codec, exactly
+        want = np.asarray(dequantize_int8(*quantize_int8(a)).astype(a.dtype))
+        np.testing.assert_array_equal(np.asarray(c), want)
+        saw_change |= not np.array_equal(np.asarray(a), want)
+    assert saw_change                    # compression actually happened
+
+
+def test_train_main_compress_grads_routes_by_pods():
+    from repro.launch.train import main
+    base = ["--arch", "qwen2-0.5b", "--reduced", "--steps", "3",
+            "--batch", "2", "--seq", "16", "--log-every", "100"]
+    off = main(base)
+    intra = main(base + ["--compress-grads"])          # --pods 1 default
+    cross = main(base + ["--compress-grads", "--pods", "2"])
+    assert off["grad_compression"] == "off"
+    assert intra["grad_compression"] == "off"          # nothing to compress
+    np.testing.assert_allclose(off["losses"], intra["losses"])
+    assert cross["grad_compression"] == "pod-boundary"
+    assert np.isfinite(cross["losses"]).all()
