@@ -8,14 +8,20 @@ set A1-A10 over the graded datasets.  Validates the paper's claims:
 
 Caller-chosen property sets go through the unified pipeline as explicit
 plans (``CompactionPlan.explicit`` + ``Compactor.execute``).  Also
-micro-benchmarks surrogate minting: the bulk ``TermDict.ids`` allocation
-used by Algorithm 3 vs the seed's per-group ``TermDict.id`` loop.
+micro-benchmarks surrogate minting (the bulk ``TermDict.ids`` allocation
+used by Algorithm 3 vs the seed's per-group ``TermDict.id`` loop) and
+the ingest hot path's molecule-table growth (the geometric append
+buffer behind ``MoleculeTable.with_rows`` vs rebuilding by
+concatenate-and-resort on every batch).
 """
 from __future__ import annotations
 
 import time
 
+import numpy as np
+
 from repro.api import CompactionPlan, Compactor
+from repro.core.fgraph import MoleculeTable
 from repro.core import semantic_triples
 from repro.core.triples import TermDict
 from repro.data.synthetic import PROPERTY_SETS, property_set_ids
@@ -43,6 +49,56 @@ def mint_bench(fast: bool = False) -> list[dict]:
                      "bulk_ms": round(bulk_ms, 2),
                      "speedup": round(loop_ms / max(bulk_ms, 1e-9), 2)})
     report("surrogate_minting", rows)
+    return rows
+
+
+def with_rows_bench(fast: bool = False) -> list[dict]:
+    """Molecule-table growth under online ingest: a chain of small
+    ``with_rows`` appends (fresh ascending surrogates, the service's hot
+    path) against the seed behavior of rebuilding the table from
+    concatenated arrays -- O(rows added) amortized vs O(M) copy + sort
+    per batch."""
+    k = 3
+    rows = []
+    for n_batches in ((2_000,) if fast else (2_000, 8_000)):
+        per = 8
+        surr0 = np.arange(0, 64, dtype=np.int32)
+        objs0 = np.arange(64 * k, dtype=np.int32).reshape(64, k)
+        batches = [
+            (np.arange(64 + b * per, 64 + (b + 1) * per, dtype=np.int32),
+             np.arange((64 + b * per) * k, (64 + (b + 1) * per) * k,
+                       dtype=np.int32).reshape(per, k))
+            for b in range(n_batches)]
+
+        amort = MoleculeTable(class_id=0, props=(1, 2, 3),
+                              surrogates=surr0, objects=objs0,
+                              next_ordinal=64)
+        amort.sig           # exercise the O(n) sig ownership transfer too
+        t0 = time.perf_counter()
+        for s, o in batches:
+            amort = amort.with_rows(s, o, int(s[-1]) + 1)
+        amort_ms = (time.perf_counter() - t0) * 1e3
+
+        naive = MoleculeTable(class_id=0, props=(1, 2, 3),
+                              surrogates=surr0, objects=objs0,
+                              next_ordinal=64)
+        t0 = time.perf_counter()
+        for s, o in batches:
+            naive = MoleculeTable(
+                class_id=naive.class_id, props=naive.props,
+                surrogates=np.concatenate([naive.surrogates, s]),
+                objects=np.concatenate([naive.objects, o]),
+                next_ordinal=int(s[-1]) + 1)
+        naive_ms = (time.perf_counter() - t0) * 1e3
+
+        assert np.array_equal(amort.surrogates, naive.surrogates)
+        assert np.array_equal(amort.objects, naive.objects)
+        assert len(amort.sig) == amort.n_molecules
+        rows.append({"n_batches": n_batches, "rows_per_batch": per,
+                     "amortized_ms": round(amort_ms, 2),
+                     "rebuild_ms": round(naive_ms, 2),
+                     "speedup": round(naive_ms / max(amort_ms, 1e-9), 2)})
+    report("with_rows_growth", rows)
     return rows
 
 
@@ -78,6 +134,7 @@ def run(fast: bool = False) -> list[dict]:
         assert max(meas, key=meas.get) == "A8", (ds, meas)
     report("table5_savings", rows)
     mint_bench(fast)
+    with_rows_bench(fast)
     return rows
 
 

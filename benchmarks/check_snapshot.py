@@ -25,6 +25,14 @@ Asserts the structural invariants the bench-smoke job exists to protect:
    workload of the frequent-pattern-heavy class (the paper's "queries
    get faster on G'" claim), and the batched device query path does not
    retrace warm.
+6. **Online compaction pays** -- the drift matrix from the
+   ``launch/serve.py --online`` soak must show a drained write-ahead
+   queue, zero warm retraces on forced re-detection, a service edge
+   count never above the no-recompaction twin, per-pass realized-edge
+   monotonicity (the planner's hill-climb guard), a final edge
+   advantage strictly better than the initial one, and digest parity
+   between the incremental final state and a from-scratch compaction of
+   the net graph.
 
     python -m benchmarks.check_snapshot [path/to/BENCH_fsp.json]
 """
@@ -121,6 +129,7 @@ def check(path: str = DEFAULT_PATH) -> list[str]:
                 f"expected exactly 1.0 (candidate batching regressed)")
 
     errors.extend(check_query(snap.get("query")))
+    errors.extend(check_drift(snap.get("drift")))
     return errors
 
 
@@ -163,6 +172,46 @@ def check_query(query: dict | None) -> list[str]:
     for wname in ("lookup", "lookup_heavy", "var_arm"):
         if wname not in query.get("workloads", {}):
             errors.append(f"query matrix missing workload {wname!r}")
+    return errors
+
+
+def check_drift(drift: dict | None) -> list[str]:
+    """Gate the online-compaction drift matrix (module docstring, item 6)."""
+    errors: list[str] = []
+    if not drift:
+        errors.append("snapshot has no drift matrix (rerun --snapshot)")
+        return errors
+    if not drift.get("drained"):
+        errors.append("drift: write-ahead queue did not drain")
+    if drift.get("warm_redetect_traces") != 0:
+        errors.append(
+            f"drift: forced re-detection retraced warm shapes "
+            f"({drift.get('warm_redetect_traces')!r} traces, expected 0)")
+    if not drift.get("redetect_digest_stable"):
+        errors.append("drift: forced re-detect changed graph semantics "
+                      "(digest moved)")
+    if not drift.get("never_above_baseline"):
+        errors.append("drift: service edge count exceeded the "
+                      "no-recompaction baseline")
+    if not drift.get("redetect_monotone"):
+        errors.append("drift: a re-detection pass increased the realized "
+                      "edge count (hill-climb guard regressed)")
+    if not drift.get("final_gap", 0) < drift.get("first_gap", 0):
+        errors.append(
+            f"drift: recompaction never beat the no-recompaction twin "
+            f"(edge advantage {drift.get('first_gap')} -> "
+            f"{drift.get('final_gap')})")
+    if not drift.get("batch_parity_digest"):
+        errors.append("drift: incremental final state != from-scratch "
+                      "compaction of the net graph")
+    rows = drift.get("rows", [])
+    if len(rows) != drift.get("n_batches"):
+        errors.append(
+            f"drift: matrix has {len(rows)} rows for "
+            f"{drift.get('n_batches')} batches")
+    elif not any(r.get("n_dirty") for r in rows):
+        errors.append("drift: soak never marked a class dirty -- the "
+                      "workload no longer exercises re-detection")
     return errors
 
 

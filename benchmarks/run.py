@@ -1,6 +1,7 @@
 """Benchmark driver: one module per paper table/figure + kernel micro +
 the distributed-FSP roofline cell + the detector x backend perf snapshot
-+ the star-query latency matrix (raw vs factorized x host/device).
++ the star-query latency matrix (raw vs factorized x host/device)
++ the online-compaction drift matrix (soak via ``launch/serve.py``).
 
     python -m benchmarks.run [--fast]        # full paper suite
     python -m benchmarks.run --snapshot      # BENCH_fsp.json only (CI smoke)
@@ -105,6 +106,7 @@ def snapshot(fast: bool = True) -> dict:
             for k, v in sorted(bucket_shapes.items())},
         "cells": cells,
         "query": query_matrix(fast=fast),
+        "drift": drift_matrix(fast=fast),
     }
     with open(SNAPSHOT_PATH, "w") as f:
         json.dump(out, f, indent=1)
@@ -119,6 +121,18 @@ def snapshot(fast: bool = True) -> dict:
               f"evals={c['evaluations']:<6d} "
               f"savings={c['pct_savings_triples']:.2f}%")
     return out
+
+
+def drift_matrix(fast: bool = True) -> dict:
+    """Online-compaction soak: the per-batch drift matrix (recompaction
+    latency, queue depth, dirty-class count, edge counts vs the
+    no-recompaction twin) plus the service's metrics-channel summaries.
+    Recorded with ``assert_gates=False`` so a gate regression shows up
+    as a ``check_snapshot`` FAIL over the committed numbers rather than
+    an opaque bench crash."""
+    from repro.launch.serve import serve_online
+
+    return serve_online(20 if fast else 40, assert_gates=False)
 
 
 def query_matrix(fast: bool = True) -> dict:

@@ -30,5 +30,7 @@ from .backends import (BACKENDS, DeviceBackend, ExecutionBackend,  # noqa: F401
 from .detectors import (DETECTORS, Detector, ExhaustiveDetector,  # noqa: F401
                         GreedyDetector, GSpanBaseline, get_detector,
                         register_detector)
-from .compactor import (ClassPlan, CompactionPlan, CompactionReport,  # noqa: F401
-                        Compactor, DeleteReport, UpdateReport)
+from .snapshot import (ClassPlan, CompactionPlan, CompactionPlanner,  # noqa: F401
+                       CompactionReport, DeleteReport, GraphSnapshot,
+                       RedetectReport, UpdateReport)
+from .compactor import Compactor  # noqa: F401

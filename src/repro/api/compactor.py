@@ -8,163 +8,46 @@ algorithms (detect-FSP -> factorize -> verify lossless):
     report.graph                      # G' (original store untouched)
     comp.update(new_triples)          # streaming inserts, no recomputation
 
+As of the online-compaction refactor the class is a thin facade: all
+graph state lives in an immutable :class:`~repro.api.snapshot.
+GraphSnapshot` and every transform (plan, execute, update, delete,
+redetect) is implemented by :class:`~repro.api.snapshot.
+CompactionPlanner`, which builds a *successor* snapshot instead of
+mutating anything.  The facade holds exactly one reference
+(``self._snapshot``) and commits each transform by swapping it -- a
+single atomic attribute assignment, so concurrent readers holding
+``comp.snapshot`` (or the fgraph inside it) never observe torn state.
+The long-running service in ``repro.online`` drives the same planner
+against its own snapshot reference; this class keeps the one-shot
+ergonomics.
+
 * **Planning** ranks every class of the store by predicted ``#Edges``
-  savings (Def. 4.8): the unfactorized class representation costs
-  ``AM_G(C) * |S|`` property edges (= ``#Edges(empty SP)``), the detected
-  subset costs ``#Edges(SP*)``; classes whose predicted savings fall
-  below ``min_predicted_savings`` are skipped -- the paper's Fig. 7
+  savings (Def. 4.8); classes whose predicted savings fall below
+  ``min_predicted_savings`` are skipped -- the paper's Fig. 7
   factorization-overhead case never executes.
 * **Execution** is transactional via ``core.factorize.factorize_classes``:
-  the input store is never mutated, and the compactor commits its
-  internal state (factorized graph + per-class surrogate signature maps)
-  only after every class factorized successfully.
-* **Execution commits a ``FactorizedGraph``** (``core.fgraph``): G' is
-  not a bare triple array but a first-class structure -- molecule
-  tables (surrogate -> object-tuple rows per class), the ``instanceOf``
-  CSR, Def. 4.8 accounting, lossless ``expand()`` -- which is what the
-  ``repro.query`` star-query engine evaluates against.  ``Compactor.
-  graph`` remains the plain ``TripleStore`` view; ``Compactor.fgraph``
-  is the structured one.
-* **Incremental update** absorbs streaming inserts: new entities whose
-  object tuple matches an existing star pattern link to its surrogate
-  (one ``instanceOf`` edge); novel tuples mint new surrogates with
-  continuing ordinals; incomplete molecules stay raw until later batches
-  complete them.  Losslessness (Def. 4.10/4.11) is preserved at every
-  step -- the axiom closure of the updated G' equals the closure of
-  G + inserts (tested in tests/test_api.py).
-* **Deletes** route through ``FactorizedGraph.delete_triples`` /
-  ``delete_entities`` transactionally: triples covered by molecules
-  dissolve memberships, and molecules whose support falls below payoff
-  decompact in place -- the structure never misrepresents the graph.
+  the input store is never mutated, and the snapshot swaps in only after
+  every class factorized successfully.
+* **Incremental update / deletes** absorb streaming edits on the
+  factorized form (surrogate reuse, continuing ordinals, payoff-sweep
+  decompaction) with losslessness (Def. 4.10/4.11) preserved at every
+  step -- each batch is one snapshot swap.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Iterable, Sequence
 
-import numpy as np
-
-from repro.core.factorize import (FactorizationResult, apply_molecule_map,
-                                  factorize_classes)
-from repro.core.fgraph import DeleteStats, FactorizedGraph, MoleculeTable
+from repro.core.fgraph import FactorizedGraph
 from repro.core.gfsp import FSPResult
-from repro.core.index import in_sorted
-from repro.core.star import row_groups
 from repro.core.triples import TripleStore
 
-from .backends import ExecutionBackend, get_backend
-from .detectors import Detector, get_detector
-
-
-@dataclasses.dataclass(frozen=True)
-class ClassPlan:
-    """One planned (class, SP) factorization with its predicted payoff.
-
-    The predictions are filled by the auto-planner; explicit plans carry
-    ``None`` (the caller already decided, so no evaluation is spent).
-    """
-
-    class_id: int
-    props: tuple[int, ...]
-    predicted_edges: int | None = None   # #Edges(SP, C, G) -- Def. 4.8
-    baseline_edges: int | None = None    # #Edges(emptyset) = AM_G(C) * |S|
-    detection: FSPResult | None = None
-
-    @property
-    def predicted_savings(self) -> int | None:
-        if self.predicted_edges is None or self.baseline_edges is None:
-            return None
-        return self.baseline_edges - self.predicted_edges
-
-    @property
-    def pct_predicted_savings(self) -> float:
-        savings = self.predicted_savings
-        if not self.baseline_edges or savings is None:
-            return 0.0
-        return 100.0 * savings / self.baseline_edges
-
-
-@dataclasses.dataclass
-class CompactionPlan:
-    """Ranked multi-class factorization plan (highest predicted savings
-    first for auto-plans; given order for explicit plans)."""
-
-    entries: list[ClassPlan]
-    detector: str = "explicit"
-    backend: str = "host"
-
-    def __iter__(self):
-        return iter(self.entries)
-
-    def __len__(self) -> int:
-        return len(self.entries)
-
-    def __bool__(self) -> bool:
-        return bool(self.entries)
-
-    @classmethod
-    def explicit(cls, pairs: Sequence[tuple[int, Sequence[int]]]
-                 ) -> "CompactionPlan":
-        """Plan from caller-chosen (class_id, props) pairs, applied in the
-        given order (no ranking, no savings filter, no detection cost --
-        predictions stay ``None``)."""
-        entries = [ClassPlan(class_id=int(cid),
-                             props=tuple(sorted(int(p) for p in props)))
-                   for cid, props in pairs]
-        return cls(entries=entries, detector="explicit", backend="host")
-
-
-@dataclasses.dataclass
-class CompactionReport:
-    """Outcome of one transactional multi-class compaction."""
-
-    graph: TripleStore
-    plan: CompactionPlan
-    factorizations: list[FactorizationResult]
-    n_triples_before: int
-    n_triples_after: int
-    exec_time_ms: float
-    fgraph: FactorizedGraph | None = None   # the structured G' (queryable)
-
-    @property
-    def pct_savings_triples(self) -> float:
-        if self.n_triples_before == 0:
-            return 0.0
-        return 100.0 * (self.n_triples_before - self.n_triples_after) \
-            / self.n_triples_before
-
-    @property
-    def detections(self) -> dict[int, FSPResult]:
-        return {e.class_id: e.detection for e in self.plan
-                if e.detection is not None}
-
-    def factorization_for(self, class_id: int) -> FactorizationResult:
-        for f in self.factorizations:
-            if f.class_id == class_id:
-                return f
-        raise KeyError(class_id)
-
-
-@dataclasses.dataclass
-class UpdateReport:
-    """Outcome of one incremental ``Compactor.update`` batch."""
-
-    graph: TripleStore
-    n_new_triples: int
-    n_entities_absorbed: int
-    n_new_surrogates: int
-    n_surrogates_reused: int
-    exec_time_ms: float
-
-
-@dataclasses.dataclass
-class DeleteReport:
-    """Outcome of one transactional ``Compactor.delete`` batch."""
-
-    graph: TripleStore
-    stats: DeleteStats
-    exec_time_ms: float
+from .backends import ExecutionBackend
+from .detectors import Detector
+# Plan/report dataclasses live with the planner now; re-exported here so
+# ``from repro.api.compactor import CompactionPlan`` keeps working.
+from .snapshot import (ClassPlan, CompactionPlan, CompactionPlanner,  # noqa: F401
+                       CompactionReport, DeleteReport, GraphSnapshot,
+                       RedetectReport, UpdateReport)
 
 
 class Compactor:
@@ -174,6 +57,10 @@ class Compactor:
     "gspan", "host"/"device"/"sharded") or constructed strategy instances;
     ``detector_opts``/``backend_opts`` are forwarded when a name is given
     (e.g. ``backend="sharded", backend_opts={"mesh": mesh}``).
+
+    Facade over :class:`CompactionPlanner` + one :class:`GraphSnapshot`:
+    every mutating call builds a successor snapshot and commits it with
+    one atomic reference swap.
     """
 
     def __init__(self, detector: str | Detector = "gfsp",
@@ -182,82 +69,78 @@ class Compactor:
                  surrogate_prefix: str = "repro:sg",
                  detector_opts: dict | None = None,
                  backend_opts: dict | None = None) -> None:
-        self.detector = get_detector(detector, **(detector_opts or {}))
-        self.backend = get_backend(backend, **(backend_opts or {}))
-        self.min_predicted_savings = min_predicted_savings
-        self.surrogate_prefix = surrogate_prefix
-        self._fg: FactorizedGraph | None = None
+        self.planner = CompactionPlanner(
+            detector, backend,
+            min_predicted_savings=min_predicted_savings,
+            surrogate_prefix=surrogate_prefix,
+            detector_opts=detector_opts, backend_opts=backend_opts)
+        self._snapshot: GraphSnapshot | None = None
 
-    # -- detection ---------------------------------------------------------
+    # -- planner configuration passthrough ---------------------------------
+    @property
+    def detector(self) -> Detector:
+        return self.planner.detector
+
+    @property
+    def backend(self) -> ExecutionBackend:
+        return self.planner.backend
+
+    @property
+    def min_predicted_savings(self) -> int:
+        return self.planner.min_predicted_savings
+
+    @property
+    def surrogate_prefix(self) -> str:
+        return self.planner.surrogate_prefix
+
+    # -- detection / planning ----------------------------------------------
     def detect(self, store: TripleStore, class_id: int,
                props: Sequence[int] | None = None) -> FSPResult:
         """Run the configured detector on one class."""
-        return self.detector.detect(store, int(class_id),
-                                    backend=self.backend, props=props)
+        return self.planner.detect(store, class_id, props=props)
 
-    # -- planning ----------------------------------------------------------
     def plan(self, store: TripleStore,
              classes: Iterable[int] | None = None) -> CompactionPlan:
         """Rank all (or the given) classes by predicted #Edges savings."""
-        cids = ([int(c) for c in classes] if classes is not None
-                else [int(c) for c in store.classes()])
-        entries = []
-        for cid in cids:
-            stats = store.class_stats(cid)
-            n_s = int(stats.properties.shape[0])
-            am = stats.n_instances
-            if n_s < 2 or am == 0:
-                continue                      # nothing star-shaped to share
-            res = self.detect(store, cid)
-            if len(res.props) < 2:
-                continue
-            entry = ClassPlan(class_id=cid, props=tuple(sorted(res.props)),
-                              predicted_edges=res.edges,
-                              baseline_edges=am * n_s, detection=res)
-            if entry.predicted_savings >= self.min_predicted_savings:
-                entries.append(entry)
-        entries.sort(key=lambda e: -e.predicted_savings)
-        return CompactionPlan(entries=entries, detector=self.detector.name,
-                              backend=self.backend.name)
+        return self.planner.plan(store, classes)
 
     # -- execution ---------------------------------------------------------
     def execute(self, store: TripleStore,
                 plan: CompactionPlan) -> CompactionReport:
         """Factorize every planned class transactionally.
 
-        The input store is never mutated; compactor state (for
-        ``update``) commits only after all classes succeed.
+        The input store is never mutated; the snapshot (for ``update``/
+        ``delete``) swaps in only after all classes succeed.
         """
-        t0 = time.perf_counter()
-        pairs = [(e.class_id, e.props) for e in plan]
-        graph, results = factorize_classes(
-            store, pairs, surrogate_prefix=self.surrogate_prefix)
-        # star_objects rows are aligned with surrogates and ordered over
-        # sorted props -- the molecule tables build with no rescan of G'
-        self._fg = FactorizedGraph.from_compaction(graph, results)
-        return CompactionReport(
-            graph=graph, plan=plan, factorizations=results,
-            n_triples_before=store.n_triples, n_triples_after=graph.n_triples,
-            exec_time_ms=(time.perf_counter() - t0) * 1e3,
-            fgraph=self._fg)
+        snap, report = self.planner.execute(store, plan)
+        self._snapshot = snap
+        return report
 
     def run(self, store: TripleStore,
             classes: Iterable[int] | None = None) -> CompactionReport:
         """plan + execute in one call (the common entry point)."""
         return self.execute(store, self.plan(store, classes))
 
-    # -- incremental path --------------------------------------------------
+    # -- snapshot state ----------------------------------------------------
+    @property
+    def snapshot(self) -> GraphSnapshot:
+        """The committed immutable snapshot (fgraph + epoch)."""
+        if self._snapshot is None:
+            raise RuntimeError("Compactor.run()/execute() before .snapshot")
+        return self._snapshot
+
     @property
     def fgraph(self) -> FactorizedGraph:
         """The committed factorized graph (molecule tables + CSR)."""
-        if self._fg is None:
+        if self._snapshot is None:
             raise RuntimeError("Compactor.run()/execute() before .fgraph")
-        return self._fg
+        return self._snapshot.fgraph
 
     @property
     def graph(self) -> TripleStore:
         return self.fgraph.store
 
+    # -- incremental path --------------------------------------------------
     def update(self, new_triples) -> UpdateReport:
         """Absorb streaming inserts into the factorized graph.
 
@@ -267,97 +150,11 @@ class Compactor:
         existing star pattern are linked to its surrogate; novel tuples
         mint fresh surrogates (continuing per-class ordinals); incomplete
         molecules and unplanned classes stay raw.  No full recomputation.
-        The molecule tables gain the fresh rows and the whole
-        ``FactorizedGraph`` commits atomically at the end.
+        The successor snapshot commits atomically at the end.
         """
-        fg = self.fgraph
-        t0 = time.perf_counter()
-        g = fg.store
-        if isinstance(new_triples, np.ndarray):
-            rows = np.asarray(new_triples, np.int32).reshape(-1, 3)
-        else:
-            trips = list(new_triples)
-            if trips:
-                flat = [t for spo in trips for t in spo]
-                rows = g.dict.ids(flat).reshape(-1, 3)
-            else:
-                rows = np.empty((0, 3), np.int32)
-        # merge-on-append: the (usually small) batch merges into the
-        # sorted triple array and the live GraphIndex in O(n + m log n);
-        # the factorized graph is never re-sorted or re-indexed wholesale
-        combined = g.copy()
-        combined.add_ids(rows)
-        n_absorbed = n_new_sg = n_reused = 0
-        # classes are processed sequentially against the running graph so
-        # overlapping-class entities keep the same semantics as a full
-        # factorize_classes pass; the surrogate id set is loop-invariant
-        # (ids minted below are never entities of another planned class)
-        sg_arr = fg.surrogate_ids.astype(np.int64)
-        new_tables: dict[int, MoleculeTable] = {}
-        for cid, table in fg.tables.items():
-            sig = dict(table.sig)          # working copy: commit-at-end
-            next_ordinal = table.next_ordinal
-            props_arr = np.asarray(table.props, np.int32)
-            fresh_rows: list[tuple[int, ...]] = []
-            new_tables[cid] = table
-            ents, objmat = combined.object_matrix(cid, props_arr)
-            if ents.size == 0:
-                continue
-            raw = ~in_sorted(ents, sg_arr)    # never re-factorize surrogates
-            if not raw.any():
-                continue
-            r_ents, r_mat = ents[raw], objmat[raw]
-            inv, counts, rep = row_groups(r_mat)
-            sg_of_group = np.empty((counts.shape[0],), np.int64)
-            fresh: list[tuple[int, tuple[int, ...]]] = []
-            for gi in range(counts.shape[0]):
-                key = tuple(int(x) for x in r_mat[rep[gi]])
-                sg = sig.get(key)
-                if sg is None:
-                    fresh.append((gi, key))
-                else:
-                    sg_of_group[gi] = sg
-            if fresh:
-                cname = combined.dict.term(cid)
-                names = [f"{self.surrogate_prefix}/{cname}/"
-                         f"{next_ordinal + j}" for j in range(len(fresh))]
-                new_ids = combined.dict.ids(names)
-                next_ordinal += len(fresh)
-                for (gi, key), sid in zip(fresh, new_ids.tolist()):
-                    sg_of_group[gi] = sid
-                    sig[key] = int(sid)
-                    fresh_rows.append(key)
-                new_tables[cid] = table.with_rows(
-                    new_ids, np.asarray(fresh_rows, np.int32),
-                    next_ordinal)
-            n_new_sg += len(fresh)
-            n_reused += int(counts.shape[0]) - len(fresh)
-            n_absorbed += int(r_ents.shape[0])
-            # rewrite only the absorbed entities' own rows; the rest of
-            # the (possibly huge) factorized graph passes through as a
-            # presorted slice and the rewritten rows merge back in.  The
-            # live index follows the same remove-then-merge path (a row
-            # subset of a sorted index stays sorted), so no class of this
-            # loop ever triggers a full O(|G| log |G|) re-index.
-            spo = combined.spo
-            touched = in_sorted(spo[:, 0], r_ents)
-            rewritten = apply_molecule_map(
-                spo[touched], r_ents, sg_of_group[inv].astype(np.int32),
-                props_arr, cid, combined.TYPE, combined.INSTANCE_OF)
-            idx = combined.index
-            kept_index = idx.filtered(~in_sorted(idx.rows[:, 0], r_ents))
-            combined = TripleStore.from_ids(combined.dict, spo[~touched],
-                                            presorted=True)
-            combined.add_ids(rewritten)
-            combined._index = kept_index.merged(rewritten)
-        self._fg = FactorizedGraph(
-            combined, new_tables,
-            payoff_min_support=fg.payoff_min_support)
-        return UpdateReport(
-            graph=combined, n_new_triples=int(rows.shape[0]),
-            n_entities_absorbed=n_absorbed, n_new_surrogates=n_new_sg,
-            n_surrogates_reused=n_reused,
-            exec_time_ms=(time.perf_counter() - t0) * 1e3)
+        snap, report = self.planner.apply_update(self.snapshot, new_triples)
+        self._snapshot = snap
+        return report
 
     def delete(self, triples=None, entities=None) -> DeleteReport:
         """Remove semantic triples and/or entities from the factorized
@@ -368,46 +165,16 @@ class Compactor:
         route through :class:`~repro.core.fgraph.FactorizedGraph` delete
         support -- molecule-covered triples dissolve memberships, and
         molecules whose support drops below payoff decompact in place.
-        The new graph commits only if every step succeeds.
+        The successor snapshot commits only if every step succeeds.
         """
-        fg = self.fgraph
-        t0 = time.perf_counter()
-        stats = DeleteStats()
-        if triples is not None:
-            if isinstance(triples, np.ndarray):
-                rows = np.asarray(triples, np.int32).reshape(-1, 3)
-            else:
-                # lookup, never id(): a term the graph has never seen
-                # cannot name an existing triple, and a no-op delete must
-                # not grow the shared dictionary as a side effect
-                d = fg.store.dict
-                rows_list = []
-                n_unknown = 0
-                for s, p, o in triples:
-                    ids3 = (d.lookup(s), d.lookup(p), d.lookup(o))
-                    if None in ids3:
-                        n_unknown += 1
-                        continue
-                    rows_list.append(ids3)
-                stats.n_requested += n_unknown     # counted, trivially absent
-                rows = np.asarray(rows_list, np.int32).reshape(-1, 3)
-            fg, st = fg.delete_triples(rows)
-            for f in dataclasses.fields(st):
-                setattr(stats, f.name,
-                        getattr(stats, f.name) + getattr(st, f.name))
-        if entities is not None:
-            if isinstance(entities, np.ndarray):
-                ids = np.asarray(entities, np.int64).reshape(-1)
-            else:
-                d = fg.store.dict
-                looked = [d.lookup(e) for e in entities]
-                stats.n_requested += sum(1 for x in looked if x is None)
-                ids = np.asarray([x for x in looked if x is not None],
-                                 np.int64)
-            fg, st = fg.delete_entities(ids)
-            for f in dataclasses.fields(st):
-                setattr(stats, f.name,
-                        getattr(stats, f.name) + getattr(st, f.name))
-        self._fg = fg
-        return DeleteReport(graph=fg.store, stats=stats,
-                            exec_time_ms=(time.perf_counter() - t0) * 1e3)
+        snap, report = self.planner.apply_delete(
+            self.snapshot, triples=triples, entities=entities)
+        self._snapshot = snap
+        return report
+
+    def redetect(self, class_ids: Iterable[int]) -> RedetectReport:
+        """Re-detect and re-factorize only the given (drifted) classes;
+        see :meth:`CompactionPlanner.redetect`."""
+        snap, report = self.planner.redetect(self.snapshot, class_ids)
+        self._snapshot = snap
+        return report

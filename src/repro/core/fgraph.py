@@ -57,17 +57,25 @@ class MoleculeTable:
     surrogates: np.ndarray            # (M,) int32, ascending
     objects: np.ndarray               # (M, K) int32, rows over sorted props
     next_ordinal: int
+    # construction fast path: the arrays are already ascending-by-
+    # surrogate (amortized append below) -- skip the O(M log M) argsort
+    presorted: dataclasses.InitVar[bool] = False
 
-    def __post_init__(self) -> None:
+    def __post_init__(self, presorted: bool = False) -> None:
         self.props = tuple(int(p) for p in self.props)
         self.surrogates = np.asarray(self.surrogates, np.int32).reshape(-1)
         self.objects = np.asarray(self.objects, np.int32).reshape(
             self.surrogates.shape[0], len(self.props))
-        order = np.argsort(self.surrogates, kind="stable")
-        if not np.array_equal(order, np.arange(order.shape[0])):
-            self.surrogates = self.surrogates[order]
-            self.objects = self.objects[order]
+        if not presorted:
+            order = np.argsort(self.surrogates, kind="stable")
+            if not np.array_equal(order, np.arange(order.shape[0])):
+                self.surrogates = self.surrogates[order]
+                self.objects = self.objects[order]
         self._sig: dict[tuple[int, ...], int] | None = None
+        # geometric append buffer shared along a with_rows chain:
+        # (capacity surrogates, capacity objects, [rows used]) -- the
+        # used cell is the copy-on-branch guard
+        self._append: tuple[np.ndarray, np.ndarray, list[int]] | None = None
 
     @property
     def n_molecules(self) -> int:
@@ -99,15 +107,63 @@ class MoleculeTable:
 
     def with_rows(self, new_surrogates, new_objects,
                   next_ordinal: int) -> "MoleculeTable":
-        """New table with appended molecule rows (update path)."""
-        return MoleculeTable(
+        """New table with appended molecule rows (update path).
+
+        The ingest hot path appends *freshly minted* surrogate ids --
+        strictly ascending past the current tail -- so the append runs
+        amortized O(rows added): rows land in a geometrically grown
+        capacity buffer shared along the chain of successor tables, and
+        each successor is a (presorted) view of its prefix.  Old tables
+        stay valid -- their views cover only rows written before the
+        append -- and branching two successors off one table falls back
+        to a fresh buffer (copy-on-branch, guarded by the used counter).
+        Non-ascending appends (surrogate id reuse after a redetect) take
+        the plain concatenate-and-resort path.
+        """
+        new_s = np.asarray(new_surrogates, np.int32).reshape(-1)
+        new_o = np.asarray(new_objects, np.int32).reshape(-1, self.k)
+        m, n = self.n_molecules, int(new_s.shape[0])
+        if n == 0:
+            return MoleculeTable(
+                class_id=self.class_id, props=self.props,
+                surrogates=self.surrogates, objects=self.objects,
+                next_ordinal=next_ordinal, presorted=True)
+        ascending = bool(np.all(np.diff(new_s) > 0)) and \
+            (m == 0 or int(new_s[0]) > int(self.surrogates[-1]))
+        if not ascending:
+            return MoleculeTable(
+                class_id=self.class_id, props=self.props,
+                surrogates=np.concatenate([self.surrogates, new_s]),
+                objects=np.concatenate([self.objects, new_o]),
+                next_ordinal=next_ordinal)
+        buf = self._append
+        if buf is None or buf[2][0] != m or buf[0].shape[0] < m + n:
+            cap = max(2 * (m + n), 16)
+            buf_s = np.empty((cap,), np.int32)
+            buf_o = np.empty((cap, max(self.k, 1)), np.int32)
+            buf_s[:m] = self.surrogates
+            if self.k:
+                buf_o[:m, :self.k] = self.objects
+            buf = (buf_s, buf_o, [m])
+        buf[0][m:m + n] = new_s
+        if self.k:
+            buf[1][m:m + n, :self.k] = new_o
+        buf[2][0] = m + n
+        out = MoleculeTable(
             class_id=self.class_id, props=self.props,
-            surrogates=np.concatenate(
-                [self.surrogates, np.asarray(new_surrogates, np.int32)]),
-            objects=np.concatenate(
-                [self.objects,
-                 np.asarray(new_objects, np.int32).reshape(-1, self.k)]),
-            next_ordinal=next_ordinal)
+            surrogates=buf[0][:m + n], objects=buf[1][:m + n, :self.k],
+            next_ordinal=next_ordinal, presorted=True)
+        out._append = buf
+        self._append = None     # successor owns the buffer now
+        if self._sig is not None:
+            # sig ownership transfer: extending the parent's map costs
+            # O(n), rebuilding it on the successor would cost O(m + n)
+            sig = self._sig
+            self._sig = None    # parent rebuilds lazily if probed again
+            for row, sg in zip(new_o.tolist(), new_s.tolist()):
+                sig[tuple(row)] = int(sg)
+            out._sig = sig
+        return out
 
     def without_rows(self, drop: Sequence[int]) -> "MoleculeTable":
         keep = np.ones((self.n_molecules,), bool)
@@ -127,6 +183,15 @@ class DeleteStats:
     n_exits: int = 0                # (entity, molecule) memberships dissolved
     n_decompacted: int = 0          # entities re-materialized as raw triples
     n_molecules_removed: int = 0    # molecules invalidated / below payoff
+    # class id -> {"exits" | "decompacted" | "molecules_removed": count};
+    # the drift tracker consumes these to attribute support decay to the
+    # classes that suffered it (repro.online.drift)
+    per_class: dict = dataclasses.field(default_factory=dict)
+
+    def note_class(self, cid: int, key: str, n: int = 1) -> None:
+        if n:
+            d = self.per_class.setdefault(int(cid), {})
+            d[key] = d.get(key, 0) + int(n)
 
 
 # the support below which a molecule stops paying for itself: a molecule
@@ -317,6 +382,48 @@ class FactorizedGraph:
         return TripleStore.from_ids(self.store.dict,
                                     np.concatenate(parts, axis=0))
 
+    def decompact_classes(self, class_ids: Iterable[int]
+                          ) -> "FactorizedGraph":
+        """Decompact ONLY the given classes: their members take their
+        molecule arms and ``type`` edges back as raw triples, their
+        surrogate rows and ``instanceOf`` links disappear, and every
+        other class's table and triples pass through untouched.  This is
+        the targeted-redetection primitive (``CompactionPlanner.
+        redetect``): the rebuilt store costs one sort over the result,
+        proportional to the dirty classes' footprint plus one pass over
+        the store -- never a re-factorization of the clean classes."""
+        cids = sorted({int(c) for c in class_ids if int(c) in self.tables})
+        if not cids:
+            return self
+        drop_sgs = np.sort(np.concatenate(
+            [self.tables[c].surrogates for c in cids]).astype(np.int64))
+        spo = self.store.spo
+        keep = ~in_sorted(spo[:, 0].astype(np.int64), drop_sgs) & \
+            ~((spo[:, 1] == self.store.INSTANCE_OF) &
+              in_sorted(spo[:, 2].astype(np.int64), drop_sgs))
+        parts = [spo[keep]]
+        for cid in cids:
+            t = self.tables[cid]
+            ents, src = self.members_of(t.surrogates)
+            if ents.shape[0] == 0:
+                continue
+            k = t.k
+            arm_rows = np.empty((ents.shape[0] * k, 3), np.int32)
+            arm_rows[:, 0] = np.repeat(ents, k)
+            arm_rows[:, 1] = np.tile(np.asarray(t.props, np.int32),
+                                     ents.shape[0])
+            arm_rows[:, 2] = t.objects[src].ravel()
+            type_rows = np.empty((ents.shape[0], 3), np.int32)
+            type_rows[:, 0] = ents
+            type_rows[:, 1] = self.store.TYPE
+            type_rows[:, 2] = cid
+            parts.extend([arm_rows, type_rows])
+        store = TripleStore.from_ids(self.store.dict,
+                                     np.concatenate(parts, axis=0))
+        tables = {c: t for c, t in self.tables.items() if c not in cids}
+        return FactorizedGraph(store, tables,
+                               payoff_min_support=self.payoff_min_support)
+
     def validate(self) -> None:
         """Assert the tables agree with the store's surrogate triples
         (used by tests; cheap relative to a factorization)."""
@@ -386,6 +493,7 @@ class FactorizedGraph:
         added = []
         for (s, sg), (cols, type_del) in exits.items():
             cid, r = self.locate(sg)
+            stats.note_class(cid, "exits")
             t = self.tables[cid]
             for j in range(t.k):
                 if j not in cols:
@@ -441,6 +549,8 @@ class FactorizedGraph:
                     if not class_deleted:
                         added.append((m, store.TYPE, cid))
                 stats.n_decompacted += int(surviving.shape[0])
+                stats.note_class(cid, "decompacted",
+                                 int(surviving.shape[0]))
                 # surrogate rows + every member's instanceOf link go
                 sg_lo = np.searchsorted(store.spo[:, 0], sg, "left")
                 sg_hi = np.searchsorted(store.spo[:, 0], sg, "right")
@@ -452,6 +562,7 @@ class FactorizedGraph:
                     inst[:, 2] = sg
                     removed.append(inst)
             stats.n_molecules_removed += int(hit_rows.size)
+            stats.note_class(cid, "molecules_removed", int(hit_rows.size))
             new_tables[cid] = t.without_rows(hit_rows.tolist())
         # 2. raw rows touching a deleted entity (their instanceOf rows
         #    dissolve memberships -> collect affected surrogates)
@@ -462,6 +573,13 @@ class FactorizedGraph:
         inst_of_deleted = (spo[:, 1] == store.INSTANCE_OF) & \
             in_sorted(spo[:, 0].astype(np.int64), ents)
         affected = set(np.unique(spo[inst_of_deleted, 2]).tolist())
+        diss_sg, diss_n = np.unique(spo[inst_of_deleted, 2],
+                                    return_counts=True)
+        for sg, c in zip(diss_sg.tolist(), diss_n.tolist()):
+            try:
+                stats.note_class(self.locate(int(sg))[0], "exits", int(c))
+            except KeyError:
+                pass
         removed.append(spo[touch | inst_of_deleted])
         stats.n_raw_removed = int((touch | inst_of_deleted).sum())
         interim = self._apply_edits(
@@ -513,6 +631,7 @@ class FactorizedGraph:
                         added.append((m, t.props[j], int(t.objects[r, j])))
                     added.append((m, store.TYPE, cid))
                 stats.n_decompacted += int(mem.shape[0])
+                stats.note_class(cid, "decompacted", int(mem.shape[0]))
                 sg_lo = np.searchsorted(store.spo[:, 0], sg, "left")
                 sg_hi = np.searchsorted(store.spo[:, 0], sg, "right")
                 removed.append(store.spo[sg_lo:sg_hi])
@@ -524,6 +643,7 @@ class FactorizedGraph:
                     removed.append(inst)
             if drop:
                 stats.n_molecules_removed += len(drop)
+                stats.note_class(cid, "molecules_removed", len(drop))
                 new_tables[cid] = new_tables[cid].without_rows(drop)
         if not removed and not added:
             return self, stats

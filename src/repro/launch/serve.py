@@ -95,6 +95,177 @@ def serve_graph_queries(n_requests: int, *, n_observations: int = 600,
             "factorized_ms": timings["factorized"]}
 
 
+def serve_online(n_batches: int = 20, *, n_observations: int = 80,
+                 seed: int = 0, backend: str = "device",
+                 assert_gates: bool = True) -> dict:
+    """Soak the online compaction service with mixed ingest batches.
+
+    Drives ``n_batches`` mixed insert/delete batches through an
+    :class:`~repro.online.OnlineCompactionService` alongside a
+    no-recompaction twin (same planner, ``auto_redetect=False``) over
+    the same edit stream, and checks the service-level guarantees the
+    CI soak gates on:
+
+    * the write-ahead queue fully drains on both services;
+    * re-detection is warm after the soak: a forced re-detect of every
+      factorized class adds ZERO new sweep traces (all bucket shapes
+      were compiled during the run) and leaves the graph digest
+      unchanged;
+    * recompaction pays, monotonically: every re-detection pass leaves
+      the realized edge count no higher than it found it (the planner's
+      realized-edges guard), the service's triple count (the graph-wide
+      Def. 4.8 edge total) never exceeds the no-recompaction baseline,
+      and the final advantage strictly beats the initial one -- the
+      drift cohort's singleton churn decays the baseline while the
+      service's re-detected SP absorbs it;
+    * incremental == batch: the final snapshot is digest-identical to a
+      from-scratch ``Compactor`` run on the net graph.
+
+    Returns the ``drift`` matrix recorded per batch (recompaction
+    latency, queue depth, dirty-class count, edge counts) plus the
+    metrics-channel summaries -- ``benchmarks/run.py`` embeds this dict
+    in ``BENCH_fsp.json`` and ``check_snapshot.py`` gates it.
+    """
+    from repro.api import Compactor
+    from repro.core import sweep as core_sweep
+    from repro.data.synthetic import SensorGraphSpec, generate
+    from repro.online import OnlineCompactionService
+
+    store = generate(SensorGraphSpec(n_observations=n_observations,
+                                     seed=seed))
+    svc = OnlineCompactionService(store, detector="gfsp", backend=backend,
+                                  raw_residue_threshold=6,
+                                  support_drift_threshold=4)
+    base = OnlineCompactionService(store, detector="gfsp", backend=backend,
+                                   auto_redetect=False)
+    rng = np.random.default_rng(seed)
+    term = store.dict.term
+    type_term = term(store.TYPE)
+    classes = list(svc.snapshot.fgraph.tables.items())
+    # complete entity templates per class (every class property, §4.3
+    # assumption (a)) sampled from the ORIGINAL store, so inserted
+    # entities are candidates for whatever SP a re-detection picks
+    full_props = {cid: np.asarray(store.class_properties(cid))
+                  for cid, _ in classes}
+    full_mats = {cid: store.object_matrix(cid, full_props[cid])[1]
+                 for cid, _ in classes}
+    inserted: list[str] = []
+
+    def build_batch(b: int):
+        """One mixed batch: complete entities cloning existing rows
+        (absorb into existing molecules), a drift cohort of SINGLETON
+        tuples (shared objects on every property except one current-SP
+        column, a unique object there), and -- every third batch --
+        deletes of earlier inserts (support decay + payoff-sweep
+        pressure).  The singletons are the decay source: without
+        re-detection each one mints a sub-payoff molecule (Fig. 7
+        overhead, +1 edge apiece, forever), while re-detection shifts
+        the class SP off the churning column and absorbs the whole
+        cohort into one high-support molecule."""
+        cid, t = classes[b % len(classes)]
+        cterm = term(cid)
+        fprops = full_props[cid]
+        mat = full_mats[cid]
+        pterms = [term(int(p)) for p in fprops]
+        uniq_col = int(np.searchsorted(fprops, t.props[-1]))
+        ins = []
+        for j in range(3):          # reuse: clone a full original row
+            row = mat[int(rng.integers(0, mat.shape[0]))]
+            s = f"e:online/{b}/reuse{j}"
+            ins.append((s, type_term, cterm))
+            ins += [(s, p, term(int(o))) for p, o in zip(pterms, row)]
+            inserted.append(s)
+        for j in range(4):          # drift: singleton tuples pile up
+            s = f"e:online/{b}/drift{j}"
+            ins.append((s, type_term, cterm))
+            ins += [(s, p, f"o:uniq/{b}/{j}" if k == uniq_col
+                     else f"o:drift/{cterm}/{k}")
+                    for k, p in enumerate(pterms)]
+            inserted.append(s)
+        dels = []
+        if b % 3 == 2 and len(inserted) > 6:
+            dels = [inserted.pop(int(rng.integers(0, len(inserted))))
+                    for _ in range(4)]
+        return ins, dels
+
+    drift_rows = []
+    for b in range(n_batches):
+        ins, dels = build_batch(b)
+        for s in (svc, base):
+            s.submit(inserts=ins)
+            if dels:
+                s.submit(delete_entities=dels)
+        reps = svc.drain()
+        base.drain()
+        red = next((r.redetect for r in reps if r.redetect is not None),
+                   None)
+        drift_rows.append({
+            "batch": b,
+            "latency_ms": sum(r.latency_ms for r in reps),
+            "queue_depth": svc.queue.depth,
+            "n_dirty": len(red.considered) if red else 0,
+            "redetect_ms": red.exec_time_ms if red else 0.0,
+            "redetect_descents": red.descents if red else 0,
+            "redetect_rejected": bool(red.rejected) if red else False,
+            "redetect_edges_before": red.edges_before if red else 0,
+            "redetect_edges_after": red.edges_after if red else 0,
+            "edges": svc.snapshot.n_triples,
+            "edges_baseline": base.snapshot.n_triples,
+        })
+
+    # warm-retrace gate: every sweep shape the service will ever need
+    # was compiled during the soak, so a forced full re-detect must add
+    # zero traces -- and must not change the graph it re-derives
+    digest_before = svc.snapshot.digest()
+    core_sweep.reset_trace_stats()
+    svc.redetect(sorted(svc.snapshot.fgraph.tables))
+    warm_retraces = core_sweep.trace_count()
+    digest_after = svc.snapshot.digest()
+
+    net = svc.snapshot.fgraph.expand()
+    comp = Compactor(detector="gfsp", backend=backend)
+    comp.run(net)
+    gaps = [r["edges"] - r["edges_baseline"] for r in drift_rows]
+    result = {
+        "n_batches": n_batches,
+        "drained": svc.queue.depth == 0 and base.queue.depth == 0,
+        "warm_redetect_traces": int(warm_retraces),
+        "redetect_digest_stable": digest_after == digest_before,
+        "never_above_baseline": all(g <= 0 for g in gaps),
+        "redetect_monotone": all(
+            r["redetect_edges_after"] <= r["redetect_edges_before"]
+            for r in drift_rows if r["n_dirty"]),
+        "final_gap": gaps[-1], "first_gap": gaps[0],
+        "n_redetects": sum(1 for r in drift_rows if r["n_dirty"]),
+        "swap_count": svc.swap_count,
+        "batch_parity_digest": comp.snapshot.digest()
+        == svc.snapshot.digest(),
+        "rows": drift_rows,
+        "metrics": svc.metrics_summary(),
+    }
+    if assert_gates:
+        assert result["drained"], "ingest queue not drained"
+        assert result["warm_redetect_traces"] == 0, \
+            f"re-detection retraced warm shapes: {warm_retraces}"
+        assert result["redetect_digest_stable"], \
+            "forced re-detect changed graph semantics"
+        assert result["never_above_baseline"], \
+            f"service edge count exceeded no-recompaction baseline: {gaps}"
+        assert result["redetect_monotone"], \
+            "a re-detection pass increased the realized edge count"
+        assert result["final_gap"] < result["first_gap"], \
+            f"recompaction never beat the no-recompaction twin: {gaps}"
+        assert result["batch_parity_digest"], \
+            "incremental != from-scratch compaction of the net graph"
+    print(f"online soak: {n_batches} batches, "
+          f"{result['n_redetects']} re-detections, "
+          f"{result['swap_count']} swaps, "
+          f"edge advantage {gaps[0]} -> {gaps[-1]} vs no-recompaction, "
+          f"warm retraces {warm_retraces}, gates "
+          f"{'PASS' if assert_gates else 'recorded'}")
+    return result
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -115,7 +286,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--graph-backend", default="host",
                     choices=("host", "device"),
                     help="molecule-match backend for --graph-queries")
+    ap.add_argument("--online", action="store_true",
+                    help="soak the online compaction service (mixed "
+                         "ingest batches + drift-tracked re-detection) "
+                         "and gate the service-level guarantees")
+    ap.add_argument("--online-batches", type=int, default=20,
+                    help="ingest batches for --online")
     args = ap.parse_args(argv)
+
+    if args.online:
+        return serve_online(args.online_batches, seed=args.seed)
 
     if args.graph_queries:
         return serve_graph_queries(args.graph_queries, seed=args.seed,

@@ -1,0 +1,124 @@
+"""Per-class support-drift tracking: WHICH classes deserve re-detection.
+
+Def. 4.8 makes payoff a live quantity.  Two decay modes matter online:
+
+* **raw residue growth** -- inserts land entities whose object tuples
+  do not match any existing molecule (they stay raw, or mint fresh
+  low-support surrogates).  The class's raw-typed population grows past
+  the compacted baseline, which is exactly the signal that a *new*
+  frequent star pattern may have emerged (or the old SP stopped being
+  the best one).
+* **support drift from deletes** -- membership exits, payoff-sweep
+  decompactions and invalidated molecules shrink AMI/AM and push
+  molecules toward the Fig. 7 overhead regime.
+
+Both are tracked *incrementally*: update deltas (``UpdateReport.
+per_class``) and delete deltas (``DeleteStats.per_class``) accumulate
+into per-class counters, and the raw residue is one cached index probe
+per touched class (``entities_of_class`` minus the class's molecule
+count -- absorbed entities carry no direct ``type`` edge, so the
+difference IS the raw population).  ``dirty_classes`` never scans
+triples and never touches untouched classes; the re-detection loop it
+feeds re-evaluates ONLY what it returns.
+"""
+from __future__ import annotations
+
+from repro.core.fgraph import DeleteStats, FactorizedGraph
+
+
+def raw_residue(fg: FactorizedGraph, class_id: int) -> int:
+    """Raw-typed entity count of a class in G': entities still carrying
+    a direct ``type`` edge (surrogates included; members excluded --
+    their type edge moved to the molecule), minus the molecule count."""
+    cid = int(class_id)
+    n = int(fg.store.entities_of_class(cid).shape[0])
+    t = fg.tables.get(cid)
+    return n - (t.n_molecules if t is not None else 0)
+
+
+class DriftTracker:
+    """Accumulates per-class drift and decides the dirty set.
+
+    A class is *dirty* when, since its last (re-)detection:
+
+    * its raw residue grew by >= ``raw_residue_threshold`` entities, or
+    * its accumulated support-drift count (membership exits +
+      decompacted entities + removed molecules + online-minted
+      surrogates, which start life at the sub-payoff end) reached
+      ``support_drift_threshold``.
+
+    ``prime`` captures baselines from a fresh snapshot;
+    ``note_redetected`` re-baselines exactly the classes a redetect pass
+    considered, so drift in other classes keeps accumulating.
+    """
+
+    def __init__(self, *, raw_residue_threshold: int = 8,
+                 support_drift_threshold: int = 4) -> None:
+        self.raw_residue_threshold = int(raw_residue_threshold)
+        self.support_drift_threshold = int(support_drift_threshold)
+        self._baseline: dict[int, int] = {}      # cid -> residue at detect
+        self._support_drift: dict[int, int] = {}  # cid -> accumulated decay
+        self._touched: set[int] = set()           # cids edited since prime
+
+    # -- lifecycle ---------------------------------------------------------
+    def prime(self, fg: FactorizedGraph) -> None:
+        """Baseline every class of a freshly detected snapshot."""
+        self._baseline = {int(c): raw_residue(fg, int(c))
+                          for c in fg.store.classes().tolist()}
+        self._support_drift = {}
+        self._touched = set()
+
+    def note_redetected(self, fg: FactorizedGraph, class_ids) -> None:
+        """Re-baseline the classes a redetect pass just considered."""
+        for c in class_ids:
+            cid = int(c)
+            self._baseline[cid] = raw_residue(fg, cid)
+            self._support_drift.pop(cid, None)
+            self._touched.discard(cid)
+
+    # -- incremental feeds -------------------------------------------------
+    def observe_update(self, report) -> None:
+        """Fold one ``UpdateReport`` in: touched classes join the watch
+        set; online-minted surrogates count toward support drift (they
+        start at the sub-payoff end until later batches reuse them)."""
+        for cid in report.touched_classes:
+            self._touched.add(int(cid))
+        for cid, d in report.per_class.items():
+            self._touched.add(int(cid))
+            n = int(d.get("new_surrogates", 0))
+            if n:
+                self._support_drift[int(cid)] = \
+                    self._support_drift.get(int(cid), 0) + n
+
+    def observe_delete(self, stats: DeleteStats) -> None:
+        """Fold one ``DeleteStats`` in: exits, decompactions and removed
+        molecules all witness support decay of their class."""
+        for cid, d in stats.per_class.items():
+            n = int(d.get("exits", 0)) + int(d.get("decompacted", 0)) \
+                + int(d.get("molecules_removed", 0))
+            if n:
+                cid = int(cid)
+                self._touched.add(cid)
+                self._support_drift[cid] = \
+                    self._support_drift.get(cid, 0) + n
+
+    # -- the decision ------------------------------------------------------
+    def support_drift(self, class_id: int) -> int:
+        return self._support_drift.get(int(class_id), 0)
+
+    def residue_growth(self, fg: FactorizedGraph, class_id: int) -> int:
+        cid = int(class_id)
+        return raw_residue(fg, cid) - self._baseline.get(cid, 0)
+
+    def dirty_classes(self, fg: FactorizedGraph) -> list[int]:
+        """Classes whose accumulated drift crossed a threshold -- the
+        ONLY classes the re-detection loop will re-evaluate.  Probes
+        touched classes exclusively (cached index lookups), so the check
+        itself is proportional to the edited set, not the graph."""
+        dirty = []
+        for cid in sorted(self._touched):
+            if self.support_drift(cid) >= self.support_drift_threshold \
+                    or self.residue_growth(fg, cid) \
+                    >= self.raw_residue_threshold:
+                dirty.append(cid)
+        return dirty

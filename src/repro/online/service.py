@@ -1,0 +1,270 @@
+"""The online compaction service: single writer, snapshot-swap commits.
+
+Loop shape (one :meth:`OnlineCompactionService.step`):
+
+    head = queue.peek()                      # write-ahead: stays queued
+    snapshot' = planner.apply_update/delete  # build successor, no mutation
+    self._snapshot = snapshot'               # THE swap: one atomic store
+    queue.mark_applied(head.seq)             # commit point
+    dirty = drift.dirty_classes(...)         # incremental counters
+    planner.redetect(snapshot', dirty)       # ONLY drifted classes
+                                             # (fault.retry-wrapped)
+
+The swap is a single Python attribute assignment, so readers that
+grabbed ``service.snapshot`` before it keep a fully consistent
+(immutable) world view -- queries never block on recompaction and never
+see torn state.  The write-ahead ordering (apply -> swap -> mark)
+means a failure anywhere leaves the head batch queued and the old
+snapshot live: nothing is lost, the step just reruns.
+
+Re-detection is the expensive part, so it is wrapped in
+``dist.fault.retry`` with a ``dist.fault.Monitor`` heartbeat: a failed
+or straggling pass is retried with backoff, and if every attempt fails
+the dirty classes simply STAY dirty (counters intact) while ingest
+continues -- availability over freshness.
+
+Every step feeds the accumulator metrics channels (``queue.depth``,
+``ingest.batch_ms``, ``redetect.ms``, ``redetect.dirty_classes``,
+``swap.count``, ``savings.<class>``, ...): per-batch last value plus
+running summaries, exported by :meth:`metrics_summary` and
+``launch/serve.py --online``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+from repro.api.snapshot import (CompactionPlanner, DeleteReport,
+                                GraphSnapshot, RedetectReport, UpdateReport)
+from repro.core.fgraph import FactorizedGraph
+from repro.core.triples import TripleStore
+from repro.dist import fault
+
+from .drift import DriftTracker
+from .metrics import MetricsHub
+from .wal import IngestBatch, IngestQueue
+
+
+@dataclasses.dataclass
+class BatchReport:
+    """Everything one ``step`` did: the applied batch, the swap(s), and
+    any re-detection it triggered."""
+
+    seq: int
+    epoch_before: int
+    epoch_after: int
+    latency_ms: float
+    update: UpdateReport | None = None
+    delete: DeleteReport | None = None
+    redetect: RedetectReport | None = None
+
+
+class OnlineCompactionService:
+    """Write-ahead ingest + drift-tracked re-detection over snapshots.
+
+    ``source`` may be a plain :class:`TripleStore` (compacted once at
+    construction), an existing :class:`GraphSnapshot`, or a bare
+    :class:`FactorizedGraph` (wrapped at epoch 0).  All writes go
+    through :meth:`submit` (term- or id-level) and apply in FIFO order
+    via :meth:`step` / :meth:`drain`; the service is single-writer but
+    any number of readers may hold :attr:`snapshot` concurrently.
+    """
+
+    def __init__(self, source, *,
+                 detector: str = "gfsp", backend: str = "host",
+                 planner: CompactionPlanner | None = None,
+                 min_predicted_savings: int = 1,
+                 drift: DriftTracker | None = None,
+                 raw_residue_threshold: int = 8,
+                 support_drift_threshold: int = 4,
+                 metrics: MetricsHub | None = None,
+                 monitor: fault.Monitor | None = None,
+                 redetect_deadline_s: float = 30.0,
+                 retry_attempts: int = 3, retry_base_s: float = 0.01,
+                 retry_sleep=None,
+                 auto_redetect: bool = True) -> None:
+        self.planner = planner or CompactionPlanner(
+            detector, backend,
+            min_predicted_savings=min_predicted_savings)
+        if isinstance(source, GraphSnapshot):
+            snap = source
+        elif isinstance(source, FactorizedGraph):
+            snap = GraphSnapshot(fgraph=source, epoch=0)
+        elif isinstance(source, TripleStore):
+            snap, _ = self.planner.run(source)
+        else:
+            raise TypeError(f"cannot serve from {type(source).__name__}")
+        self._snapshot = snap
+        self.queue = IngestQueue()
+        self.drift = drift or DriftTracker(
+            raw_residue_threshold=raw_residue_threshold,
+            support_drift_threshold=support_drift_threshold)
+        self.drift.prime(snap.fgraph)
+        self.metrics = metrics or MetricsHub()
+        self.monitor = monitor or fault.Monitor(
+            deadline_s=redetect_deadline_s,
+            on_straggler=lambda w: self.metrics.observe(
+                "redetect.stragglers", 1))
+        self.retry_attempts = int(retry_attempts)
+        self.retry_base_s = float(retry_base_s)
+        self._retry_sleep = retry_sleep if retry_sleep is not None \
+            else time.sleep
+        self.auto_redetect = bool(auto_redetect)
+        self.swap_count = 0
+        self._swap_lock = threading.Lock()
+        self._redetect_step = 0
+
+    # -- read side ---------------------------------------------------------
+    @property
+    def snapshot(self) -> GraphSnapshot:
+        """The live snapshot.  Reading this is the entire consistency
+        protocol: one atomic attribute load of an immutable object."""
+        return self._snapshot
+
+    @property
+    def fgraph(self) -> FactorizedGraph:
+        return self._snapshot.fgraph
+
+    def metrics_summary(self) -> dict[str, dict]:
+        return self.metrics.summary()
+
+    # -- write side --------------------------------------------------------
+    def submit(self, inserts=None, delete_triples=None,
+               delete_entities=None) -> IngestBatch:
+        """Enqueue one edit batch (write-ahead; applied by :meth:`step`).
+
+        Term-level input is id-encoded HERE against the shared
+        dictionary: insert terms mint ids (append-only, so encoding
+        ahead of apply is safe), delete terms use ``lookup`` -- a term
+        the graph has never seen cannot name an existing triple, so
+        unknown deletes drop out as no-ops without growing the dict.
+        """
+        d = self._snapshot.store.dict
+        if inserts is not None and not isinstance(inserts, np.ndarray):
+            trips = list(inserts)
+            inserts = (d.ids([t for spo in trips for t in spo])
+                       .reshape(-1, 3) if trips else None)
+        if delete_triples is not None and \
+                not isinstance(delete_triples, np.ndarray):
+            rows = []
+            for s, p, o in delete_triples:
+                ids3 = (d.lookup(s), d.lookup(p), d.lookup(o))
+                if None not in ids3:
+                    rows.append(ids3)
+            delete_triples = np.asarray(rows, np.int32).reshape(-1, 3) \
+                if rows else None
+        if delete_entities is not None and \
+                not isinstance(delete_entities, np.ndarray):
+            ids = [d.lookup(e) for e in delete_entities]
+            ids = [i for i in ids if i is not None]
+            delete_entities = np.asarray(ids, np.int64) if ids else None
+        batch = self.queue.append(inserts=inserts,
+                                  delete_triples=delete_triples,
+                                  delete_entities=delete_entities)
+        self.metrics.observe("queue.depth", self.queue.depth)
+        return batch
+
+    def _swap(self, snap: GraphSnapshot) -> None:
+        self._snapshot = snap          # the atomic commit
+        with self._swap_lock:
+            self.swap_count += 1
+        self.metrics.observe("swap.count", self.swap_count)
+
+    def step(self) -> BatchReport | None:
+        """Apply the head batch (if any): build the successor snapshot,
+        swap, commit the queue head, then re-detect drifted classes."""
+        batch = self.queue.peek()
+        if batch is None:
+            return None
+        t0 = time.perf_counter()
+        snap = self._snapshot
+        epoch_before = snap.epoch
+        upd = dele = None
+        if batch.inserts.shape[0]:
+            snap, upd = self.planner.apply_update(snap, batch.inserts)
+        if batch.delete_triples.shape[0] or batch.delete_entities.shape[0]:
+            snap, dele = self.planner.apply_delete(
+                snap,
+                triples=(batch.delete_triples
+                         if batch.delete_triples.shape[0] else None),
+                entities=(batch.delete_entities
+                          if batch.delete_entities.shape[0] else None))
+        if snap is not self._snapshot:
+            self._swap(snap)
+        self.queue.mark_applied(batch.seq)     # commit point: swap landed
+        if upd is not None:
+            self.drift.observe_update(upd)
+        if dele is not None:
+            self.drift.observe_delete(dele.stats)
+        latency = (time.perf_counter() - t0) * 1e3
+        self.metrics.observe("ingest.batch_ms", latency)
+        self.metrics.observe("queue.depth", self.queue.depth)
+        red = None
+        if self.auto_redetect:
+            dirty = self.drift.dirty_classes(self._snapshot.fgraph)
+            if dirty:
+                red = self.redetect(dirty)
+        return BatchReport(seq=batch.seq, epoch_before=epoch_before,
+                           epoch_after=self._snapshot.epoch,
+                           latency_ms=latency, update=upd, delete=dele,
+                           redetect=red)
+
+    def drain(self, max_batches: int | None = None) -> list[BatchReport]:
+        """Apply queued batches FIFO until empty (or ``max_batches``)."""
+        out: list[BatchReport] = []
+        while self.queue and (max_batches is None
+                              or len(out) < max_batches):
+            rep = self.step()
+            if rep is None:     # pragma: no cover - queue raced empty
+                break
+            out.append(rep)
+        return out
+
+    # -- re-detection ------------------------------------------------------
+    def redetect(self, class_ids) -> RedetectReport | None:
+        """Re-detect ONLY ``class_ids``, retried on failure.
+
+        The pass runs against the current snapshot under
+        ``dist.fault.retry`` with Monitor heartbeats; on success the
+        successor swaps in and the drift baselines reset.  If every
+        attempt fails the old snapshot stays live, the ingest queue is
+        untouched, and the classes remain dirty -- the next batch will
+        trigger another try.
+        """
+        cids = [int(c) for c in class_ids]
+        if not cids:
+            return None
+
+        def attempt():
+            self._redetect_step += 1
+            self.monitor.record("redetect", self._redetect_step)
+            out = self.planner.redetect(self._snapshot, cids)
+            self.monitor.record("redetect", self._redetect_step)
+            self.monitor.check()
+            return out
+
+        try:
+            snap, report = fault.retry(
+                attempt, attempts=self.retry_attempts,
+                base_s=self.retry_base_s, sleep=self._retry_sleep)()
+        except Exception:
+            # exhausted: stay on the old snapshot, keep the drift
+            # counters -- re-detection is an optimization, never a
+            # correctness requirement
+            self.metrics.observe("redetect.failures", 1)
+            return None
+        if snap is not self._snapshot:     # rejected passes don't swap
+            self._swap(snap)
+        # re-baseline either way: the decision was made against this
+        # state; drift re-accumulates before the classes go dirty again
+        self.drift.note_redetected(snap.fgraph, report.considered)
+        self.metrics.observe("redetect.ms", report.exec_time_ms)
+        self.metrics.observe("redetect.dirty_classes", len(cids))
+        self.metrics.observe("redetect.descents", report.descents)
+        term = snap.store.dict.term
+        for cid, saving in report.per_class_savings.items():
+            self.metrics.observe(f"savings.{term(cid)}", saving)
+        return report

@@ -1,0 +1,88 @@
+"""Write-ahead ingest queue: edits are durable-in-queue until applied.
+
+Edits enter as id-encoded batches (the service encodes terms at submit
+time, so a queued batch is replayable against any snapshot sharing the
+dictionary).  The head batch stays in the queue until the service has
+built AND swapped the successor snapshot -- ``mark_applied`` is the
+commit point -- so a crash or a failed apply between ``peek`` and the
+swap never loses writes: the next ``step`` sees the same head again.
+Apply order is strictly FIFO (``mark_applied`` refuses anything but the
+head), which is what makes replays deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+_EMPTY3 = np.empty((0, 3), np.int32)
+_EMPTY1 = np.empty((0,), np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestBatch:
+    """One queued edit batch, id-encoded over the shared dictionary."""
+
+    seq: int
+    inserts: np.ndarray         # (n, 3) int32 triple ids
+    delete_triples: np.ndarray  # (m, 3) int32 triple ids
+    delete_entities: np.ndarray  # (k,) int64 entity ids
+
+    @property
+    def n_edits(self) -> int:
+        return int(self.inserts.shape[0] + self.delete_triples.shape[0]
+                   + self.delete_entities.shape[0])
+
+    @property
+    def empty(self) -> bool:
+        return self.n_edits == 0
+
+
+class IngestQueue:
+    """FIFO write-ahead queue of :class:`IngestBatch` entries."""
+
+    def __init__(self) -> None:
+        self._batches: deque[IngestBatch] = deque()
+        self._next_seq = 0
+        self.n_applied = 0
+
+    def append(self, inserts=None, delete_triples=None,
+               delete_entities=None) -> IngestBatch:
+        batch = IngestBatch(
+            seq=self._next_seq,
+            inserts=(np.asarray(inserts, np.int32).reshape(-1, 3)
+                     if inserts is not None else _EMPTY3),
+            delete_triples=(np.asarray(delete_triples,
+                                       np.int32).reshape(-1, 3)
+                            if delete_triples is not None else _EMPTY3),
+            delete_entities=(np.asarray(delete_entities,
+                                        np.int64).reshape(-1)
+                             if delete_entities is not None else _EMPTY1))
+        self._next_seq += 1
+        self._batches.append(batch)
+        return batch
+
+    def peek(self) -> IngestBatch | None:
+        """The head batch, NOT removed -- it leaves only via
+        :meth:`mark_applied` after its snapshot swapped in."""
+        return self._batches[0] if self._batches else None
+
+    def mark_applied(self, seq: int) -> None:
+        """Commit point: drop the head batch (and only the head)."""
+        if not self._batches or self._batches[0].seq != seq:
+            head = self._batches[0].seq if self._batches else None
+            raise ValueError(f"mark_applied({seq}) out of order "
+                             f"(head is {head})")
+        self._batches.popleft()
+        self.n_applied += 1
+
+    @property
+    def depth(self) -> int:
+        return len(self._batches)
+
+    def __len__(self) -> int:
+        return len(self._batches)
+
+    def __bool__(self) -> bool:
+        return bool(self._batches)

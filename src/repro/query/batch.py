@@ -32,7 +32,8 @@ import numpy as np
 
 from repro.core.fgraph import FactorizedGraph, MoleculeTable
 from repro.core.sweep import (MAX_SWEEP_CANDIDATES, _note_trace,
-                              bucket_candidates, bucket_cols, bucket_rows)
+                              bucket_candidates, bucket_cols, bucket_rows,
+                              register_stats_reset)
 
 from .star import Bindings, StarQuery, eval_factorized
 
@@ -44,6 +45,12 @@ QUERY_EXEC = {"lowerings": 0, "batches": 0}
 def reset_query_stats() -> None:
     QUERY_EXEC["lowerings"] = 0
     QUERY_EXEC["batches"] = 0
+
+
+# core.sweep.reset_trace_stats() is the one reset the bench harness
+# calls between cells; hooking in here keeps QUERY_EXEC from bleeding
+# one cell's lowerings into the next cell's snapshot numbers
+register_stats_reset(reset_query_stats)
 
 
 @functools.lru_cache(maxsize=None)
@@ -139,11 +146,29 @@ class QueryEngine:
     """
 
     def __init__(self, fgraph: FactorizedGraph,
-                 raw_store=None, *, use_kernel: bool = True) -> None:
+                 raw_store=None, *, use_kernel: bool = True,
+                 epoch: int = 0) -> None:
         self.fgraph = fgraph
         self._raw = raw_store
         self.use_kernel = bool(use_kernel)
-        self._bufs: dict[int, _TableBuffer] = {}
+        self.epoch = int(epoch)
+        # device buffers are keyed (epoch, class): an engine rebound to
+        # a new snapshot epoch can never serve a stale molecule table,
+        # and buffers of dropped epochs are evicted on rebind
+        self._bufs: dict[tuple[int, int], _TableBuffer] = {}
+
+    def rebind(self, fgraph: FactorizedGraph, epoch: int) -> None:
+        """Swap in a new snapshot's fgraph.  Old-epoch device buffers
+        are invalidated (evicted); the raw-store cache drops with them.
+        The jit cache is untouched -- same bucket shapes re-lower zero
+        times after a swap."""
+        if epoch == self.epoch and fgraph is self.fgraph:
+            return
+        self.fgraph = fgraph
+        self.epoch = int(epoch)
+        self._raw = None
+        self._bufs = {k: v for k, v in self._bufs.items()
+                      if k[0] == self.epoch}
 
     @property
     def raw_store(self):
@@ -160,10 +185,11 @@ class QueryEngine:
         raise ValueError(f"unknown query strategy: {strategy!r}")
 
     def _buffer(self, class_id: int) -> _TableBuffer:
-        buf = self._bufs.get(class_id)
+        key = (self.epoch, class_id)
+        buf = self._bufs.get(key)
         if buf is None:
             buf = _TableBuffer(self.fgraph.tables[class_id])
-            self._bufs[class_id] = buf
+            self._bufs[key] = buf
         return buf
 
     def query_batch(self, queries, strategy: str = "factorized",

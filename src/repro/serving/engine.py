@@ -103,22 +103,62 @@ class GraphQueryService:
     ``backend="device"``, everything else evaluates on host.  Terms
     unknown to the dictionary yield empty binding sets (nothing can
     match a term the graph has never seen).
+
+    ``source`` is a *snapshot handle*, any of:
+
+    * a bare ``FactorizedGraph`` (static graph, the original surface);
+    * a ``repro.api.GraphSnapshot``;
+    * an object with a ``.snapshot`` property (``repro.online.
+      OnlineCompactionService``, ``repro.api.Compactor``) -- the live
+      handle;
+    * a zero-arg callable returning any of the above.
+
+    Each ``run`` wave resolves the handle ONCE and serves the whole
+    wave from that immutable snapshot: queries issued during an
+    in-flight recompaction are answered from the old epoch (consistent,
+    never torn) and the next wave picks up the swap.  The engine's
+    device buffers are epoch-keyed, so a swap invalidates them without
+    any cross-thread coordination.
     """
 
-    def __init__(self, fgraph, *, backend: str = "host",
+    def __init__(self, source, *, backend: str = "host",
                  use_kernel: bool = True):
         from repro.query import QueryEngine
-        self.fgraph = fgraph
+        self._source = source
         self.backend = backend
-        self.engine = QueryEngine(fgraph, use_kernel=use_kernel)
+        snap = self._resolve()
+        self.engine = QueryEngine(snap.fgraph, use_kernel=use_kernel,
+                                  epoch=snap.epoch)
         self.queue: list[GraphQueryRequest] = []
+
+    def _resolve(self):
+        """Current snapshot from the handle (one atomic read)."""
+        from repro.api.snapshot import GraphSnapshot
+        src = self._source
+        if callable(src):
+            src = src()
+        if isinstance(src, GraphSnapshot):
+            return src
+        snap = getattr(src, "snapshot", None)
+        if snap is not None:
+            return snap
+        return GraphSnapshot(fgraph=src, epoch=0)   # bare FactorizedGraph
+
+    @property
+    def fgraph(self):
+        """The fgraph a wave starting now would serve from."""
+        return self._resolve().fgraph
+
+    @property
+    def epoch(self) -> int:
+        return int(self._resolve().epoch)
 
     def submit(self, req: GraphQueryRequest) -> None:
         self.queue.append(req)
 
-    def _compile(self, req: GraphQueryRequest):
+    def _compile(self, req: GraphQueryRequest, fgraph):
         from repro.query import StarQuery
-        d = self.fgraph.store.dict
+        d = fgraph.store.dict
         cid = None
         if req.class_term is not None:
             cid = d.lookup(req.class_term)
@@ -142,8 +182,13 @@ class GraphQueryService:
         batch, self.queue = self.queue, []
         if not batch:
             return {}
-        term = self.fgraph.store.dict.term
-        compiled = [(req, self._compile(req)) for req in batch]
+        # resolve the handle once: the ENTIRE wave -- compilation,
+        # batched match, term decoding -- reads this one immutable
+        # snapshot, so a concurrent swap cannot tear a wave
+        snap = self._resolve()
+        self.engine.rebind(snap.fgraph, snap.epoch)
+        term = snap.fgraph.store.dict.term
+        compiled = [(req, self._compile(req, snap.fgraph)) for req in batch]
         # factorized queries of the wave evaluate as ONE batch (device
         # backend: one molecule-match lowering per class chunk)
         fact = [(req, q) for req, q in compiled

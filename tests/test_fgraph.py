@@ -294,3 +294,92 @@ def test_semantic_triples_preserved_through_delete_and_update():
         np.int32))
     a, b = semantic_triples(raw), semantic_triples(comp.graph)
     assert a.shape == b.shape and (a == b).all()
+
+
+# ---------------------------------------------------------------------------
+# amortized molecule-table growth (with_rows append buffer)
+# ---------------------------------------------------------------------------
+
+def _table(m=6, k=2, base=10):
+    from repro.core.fgraph import MoleculeTable
+    return MoleculeTable(
+        class_id=1, props=(5, 7),
+        surrogates=np.arange(base, base + m, dtype=np.int32),
+        objects=np.arange(m * k, dtype=np.int32).reshape(m, k),
+        next_ordinal=m)
+
+
+def test_with_rows_amortized_chain_matches_rebuild():
+    """A chain of ascending appends (the ingest hot path) lands in the
+    shared growth buffer; contents, ordering and the sig index match a
+    plain rebuild, and every intermediate table stays valid (its view
+    covers only rows written before later appends)."""
+    t = _table(m=4)
+    t.sig                                   # prime: exercise transfer
+    naive_s, naive_o = t.surrogates.copy(), t.objects.copy()
+    frozen = []                             # (table, surr copy, obj copy)
+    nxt = 100
+    for b in range(6):
+        s = np.arange(nxt, nxt + 3, dtype=np.int32)
+        o = np.arange(nxt * 2, nxt * 2 + 6, dtype=np.int32).reshape(3, 2)
+        frozen.append((t, t.surrogates.copy(), t.objects.copy()))
+        t = t.with_rows(s, o, int(s[-1]) + 1)
+        naive_s = np.concatenate([naive_s, s])
+        naive_o = np.concatenate([naive_o, o])
+        nxt += 3
+    assert np.array_equal(t.surrogates, naive_s)
+    assert np.array_equal(t.objects, naive_o)
+    assert np.all(np.diff(t.surrogates) > 0)
+    assert t.next_ordinal == int(naive_s[-1]) + 1
+    # the transferred sig covers exactly the final rows
+    assert len(t.sig) == t.n_molecules
+    for row, sg in zip(t.objects.tolist(), t.surrogates.tolist()):
+        assert t.sig[tuple(row)] == sg
+    # earlier tables in the chain were not corrupted by later appends
+    for old, s_copy, o_copy in frozen:
+        assert np.array_equal(old.surrogates, s_copy)
+        assert np.array_equal(old.objects, o_copy)
+        assert len(old.sig) == old.n_molecules   # parent rebuilds lazily
+
+
+def test_with_rows_branch_copies_on_write():
+    """Two successors branched off one table must not share writable
+    rows: the second branch falls back to a fresh buffer (used-counter
+    guard), and appends continuing the first branch leave it intact."""
+    base = _table(m=3)
+    t1 = base.with_rows(np.asarray([50, 51], np.int32),
+                        np.asarray([[1, 2], [3, 4]], np.int32), 52)
+    a = t1.with_rows(np.asarray([60], np.int32),
+                     np.asarray([[5, 6]], np.int32), 61)
+    b = t1.with_rows(np.asarray([70, 71], np.int32),
+                     np.asarray([[7, 8], [9, 10]], np.int32), 72)
+    c = a.with_rows(np.asarray([80], np.int32),
+                    np.asarray([[11, 12]], np.int32), 81)
+    assert t1.surrogates.tolist()[-2:] == [50, 51]
+    assert a.surrogates.tolist()[-1] == 60 and a.n_molecules == 6
+    assert b.surrogates.tolist()[-2:] == [70, 71] and b.n_molecules == 7
+    assert c.surrogates.tolist()[-1] == 80 and c.n_molecules == 7
+    assert b.surrogates.tolist()[:5] == t1.surrogates.tolist()
+    assert 60 not in b.surrogates.tolist()          # branches independent
+    assert 70 not in c.surrogates.tolist()
+
+
+def test_with_rows_non_ascending_falls_back_to_resort():
+    """Surrogate-id reuse after a redetect appends BELOW the tail: the
+    plain concatenate-and-resort path keeps the ascending invariant."""
+    t = _table(m=3, base=20)                # surrogates 20, 21, 22
+    out = t.with_rows(np.asarray([5, 40], np.int32),
+                      np.asarray([[90, 91], [92, 93]], np.int32), 41)
+    assert out.surrogates.tolist() == [5, 20, 21, 22, 40]
+    assert out.objects[0].tolist() == [90, 91]      # rows follow the sort
+    assert out.objects[-1].tolist() == [92, 93]
+    assert out.sig[(90, 91)] == 5 and out.sig[(92, 93)] == 40
+
+
+def test_with_rows_empty_append_refreshes_ordinal_only():
+    t = _table(m=3)
+    out = t.with_rows(np.empty((0,), np.int32),
+                      np.empty((0, 2), np.int32), 99)
+    assert out is not t and out.next_ordinal == 99
+    assert np.array_equal(out.surrogates, t.surrogates)
+    assert np.array_equal(out.objects, t.objects)

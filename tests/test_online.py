@@ -1,0 +1,387 @@
+"""Online compaction service: write-ahead queue semantics, atomic
+snapshot swaps under concurrent readers, drift-tracked re-detection
+(dirty classes only, fault-tolerant), metrics channels, and the
+incremental == batch digest-parity property over random interleavings
+of update/delete batches."""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import Compactor, GraphSnapshot
+from repro.core.fgraph import DeleteStats
+from repro.data.synthetic import SensorGraphSpec, generate
+from repro.online import (Channel, DriftTracker, IngestQueue, MetricsHub,
+                          OnlineCompactionService)
+from repro.serving import GraphQueryRequest, GraphQueryService
+
+
+def _service(n=60, seed=5, **kw):
+    store = generate(SensorGraphSpec(n_observations=n, seed=seed))
+    kw.setdefault("detector", "gfsp")
+    kw.setdefault("backend", "host")
+    return store, OnlineCompactionService(store, **kw)
+
+
+def _templates(store, cid):
+    """(class term, type term, property terms, full object matrix) for
+    minting complete entities of ``cid`` (paper §4.3 assumption (a))."""
+    term = store.dict.term
+    props = np.asarray(store.class_properties(cid))
+    _, mat = store.object_matrix(cid, props)
+    return term(cid), term(store.TYPE), [term(int(p)) for p in props], mat
+
+
+def _clone_inserts(store, cid, tag, n, rng):
+    """Term triples for ``n`` complete entities cloning existing rows."""
+    cterm, type_term, pterms, mat = _templates(store, cid)
+    term = store.dict.term
+    out, names = [], []
+    for j in range(n):
+        row = mat[int(rng.integers(0, mat.shape[0]))]
+        s = f"e:t/{tag}/{j}"
+        names.append(s)
+        out.append((s, type_term, cterm))
+        out += [(s, p, term(int(o))) for p, o in zip(pterms, row)]
+    return out, names
+
+
+def _novel_inserts(store, cid, tag, n):
+    """Complete entities with pairwise-distinct novel object tuples --
+    each mints a fresh (support-1) surrogate, feeding support drift."""
+    cterm, type_term, pterms, _ = _templates(store, cid)
+    out, names = [], []
+    for j in range(n):
+        s = f"e:n/{tag}/{j}"
+        names.append(s)
+        out.append((s, type_term, cterm))
+        out += [(s, p, f"o:novel/{tag}/{j}/{k}")
+                for k, p in enumerate(pterms)]
+    return out, names
+
+
+# ---------------------------------------------------------------------------
+# write-ahead queue
+# ---------------------------------------------------------------------------
+
+def test_queue_fifo_peek_and_commit_discipline():
+    q = IngestQueue()
+    assert not q and q.peek() is None
+    a = q.append(inserts=np.zeros((1, 3), np.int32))
+    b = q.append(delete_entities=np.asarray([7], np.int64))
+    assert q.depth == 2 and bool(q)
+    assert q.peek() is a        # peek does NOT remove: write-ahead
+    assert q.peek() is a
+    with pytest.raises(ValueError):
+        q.mark_applied(b.seq)   # only the head can commit
+    q.mark_applied(a.seq)
+    assert q.peek() is b and q.depth == 1 and q.n_applied == 1
+    q.mark_applied(b.seq)
+    assert not q and q.n_applied == 2
+
+
+def test_step_swaps_snapshot_and_preserves_old_epoch():
+    store, svc = _service(60, seed=5)
+    snap0 = svc.snapshot
+    before = (snap0.epoch, snap0.n_triples, snap0.digest())
+    ins, _ = _clone_inserts(store, store.dict.lookup("ssn:Observation"),
+                            "swap", 2, np.random.default_rng(0))
+    svc.submit(inserts=ins)
+    rep = svc.step()
+    assert rep is not None and rep.epoch_after > rep.epoch_before
+    assert svc.snapshot is not snap0 and svc.queue.depth == 0
+    # the old snapshot is immutable: a reader holding it is unaffected
+    assert (snap0.epoch, snap0.n_triples, snap0.digest()) == before
+    # and the new state equals a from-scratch compaction of the net graph
+    comp = Compactor(detector="gfsp", backend="host")
+    comp.run(svc.snapshot.fgraph.expand())
+    assert comp.snapshot.digest() == svc.snapshot.digest()
+
+
+def test_failed_apply_leaves_head_queued_and_old_snapshot_live():
+    store, svc = _service(40, seed=2)
+    snap0 = svc.snapshot
+    ins, _ = _clone_inserts(store, store.dict.lookup("ssn:Measurement"),
+                            "boom", 1, np.random.default_rng(1))
+    batch = svc.submit(inserts=ins)
+
+    def boom(snapshot, new_triples):
+        raise RuntimeError("injected apply failure")
+
+    svc.planner.apply_update = boom
+    with pytest.raises(RuntimeError, match="injected"):
+        svc.step()
+    # write-ahead ordering: nothing committed, nothing lost
+    assert svc.snapshot is snap0
+    assert svc.queue.peek() is batch and svc.queue.depth == 1
+    del svc.planner.apply_update        # restore the real method
+    rep = svc.step()
+    assert rep is not None and rep.seq == batch.seq
+    assert svc.queue.depth == 0 and svc.snapshot is not snap0
+
+
+# ---------------------------------------------------------------------------
+# concurrency: queries during an in-flight recompaction
+# ---------------------------------------------------------------------------
+
+def test_queries_during_inflight_redetect_serve_old_snapshot():
+    """The acceptance guarantee: a query wave issued while re-detection
+    is in flight is served from the OLD snapshot, digest-identical to a
+    quiesced service pinned at that snapshot; the swap is one atomic
+    reference flip (readers only ever observe whole snapshots); the next
+    wave picks up the new epoch."""
+    store, svc = _service(80, seed=7)
+    snap0 = svc.snapshot
+    live = GraphQueryService(svc, backend="host")
+
+    real = svc.planner.redetect
+    started, release = threading.Event(), threading.Event()
+
+    def slow_redetect(snapshot, cids):
+        out = real(snapshot, cids)      # successor fully built...
+        started.set()
+        assert release.wait(30)         # ...but the swap is held back
+        return out
+
+    svc.planner.redetect = slow_redetect
+    seen: list[GraphSnapshot] = []
+    stop = threading.Event()
+
+    def sample():
+        while not stop.is_set():
+            seen.append(svc.snapshot)   # the whole consistency protocol
+
+    sampler = threading.Thread(target=sample)
+    worker = threading.Thread(
+        target=svc.redetect, args=(sorted(snap0.fgraph.tables),))
+    sampler.start()
+    worker.start()
+    try:
+        assert started.wait(30)
+        assert svc.snapshot is snap0    # in flight: old world still live
+
+        term = store.dict.term
+        reqs = []
+        for rid, (cid, t) in enumerate(sorted(snap0.fgraph.tables.items())):
+            reqs.append(GraphQueryRequest(
+                rid=rid,
+                arms=tuple((term(int(p)), term(int(o)))
+                           for p, o in zip(t.props, t.objects[0])),
+                class_term=term(cid)))
+        for r in reqs:
+            live.submit(r)
+        mid_flight = live.run()
+        assert live.engine.epoch == snap0.epoch
+
+        quiesced_svc = GraphQueryService(snap0, backend="host")
+        for r in reqs:
+            quiesced_svc.submit(r)
+        quiesced = quiesced_svc.run()
+        for rid in quiesced:
+            a, b = mid_flight[rid], quiesced[rid]
+            assert sorted(a.subjects) == sorted(b.subjects), rid
+            assert a.n_rows == b.n_rows, rid
+    finally:
+        release.set()
+        worker.join(30)
+        stop.set()
+        sampler.join(30)
+
+    # no torn reads: every sampled reference was a complete snapshot,
+    # either the old epoch or the swapped-in successor
+    final = svc.snapshot
+    assert all(s is snap0 or s is final for s in seen)
+    # semantics survived the pass, and the next wave tracks the swap
+    assert final.digest() == snap0.digest()
+    live.submit(reqs[0])
+    live.run()
+    assert live.engine.epoch == final.epoch
+
+
+# ---------------------------------------------------------------------------
+# drift-tracked re-detection
+# ---------------------------------------------------------------------------
+
+def test_redetect_considers_only_dirty_classes():
+    """Support drift in ONE class re-evaluates exactly that class: the
+    re-detection report names it alone, the sweep work spent on it is
+    visible as an EXEC_STATS descent delta on the report (not
+    wall-clock), and the clean class's molecule table survives by
+    REFERENCE -- proof no detection work was redone for it."""
+    store, svc = _service(60, seed=9, support_drift_threshold=4,
+                          raw_residue_threshold=10**6)
+    obs = store.dict.lookup("ssn:Observation")
+    meas = store.dict.lookup("ssn:Measurement")
+    ins, _ = _novel_inserts(store, obs, "drift", 4)   # 4 fresh surrogates
+    svc.submit(inserts=ins)
+    rep = svc.step()                    # step applies AND redetects
+    assert rep.redetect is not None
+    assert rep.redetect.considered == (obs,)          # dirty class ONLY
+    assert rep.redetect.descents > 0
+
+    # work proportional to the dirty set: re-running over the final
+    # snapshot rebuilds the dirty class's table but passes the clean
+    # class's through untouched (same object, zero sweeps spent on it)
+    snap = svc.snapshot
+    new_snap, again = svc.planner.redetect(snap, [obs])
+    assert new_snap.fgraph.tables[meas] is snap.fgraph.tables[meas]
+    assert new_snap.fgraph.tables[obs] is not snap.fgraph.tables[obs]
+
+
+def test_clean_class_untouched_by_redetect_of_other():
+    store, svc = _service(60, seed=9, support_drift_threshold=4,
+                          raw_residue_threshold=10**6)
+    obs = store.dict.lookup("ssn:Observation")
+    meas = store.dict.lookup("ssn:Measurement")
+    before = svc.snapshot.fgraph.tables[meas]
+    ins, _ = _novel_inserts(store, obs, "clean", 4)
+    svc.submit(inserts=ins)
+    rep = svc.step()
+    assert rep.redetect is not None and meas not in rep.redetect.considered
+    after = svc.snapshot.fgraph.tables[meas]
+    assert after.props == before.props
+    assert np.array_equal(after.surrogates, before.surrogates)
+    assert np.array_equal(after.objects, before.objects)
+
+
+def test_redetect_retry_recovers_and_failure_keeps_state():
+    store, svc = _service(40, seed=3, auto_redetect=False,
+                          retry_attempts=3, retry_base_s=0.0,
+                          retry_sleep=lambda s: None)
+    obs = store.dict.lookup("ssn:Observation")
+    real = svc.planner.redetect
+    calls = []
+
+    def flaky(snapshot, cids):
+        calls.append(tuple(cids))
+        if len(calls) == 1:
+            raise RuntimeError("transient detection failure")
+        return real(snapshot, cids)
+
+    svc.planner.redetect = flaky
+    rep = svc.redetect([obs])
+    assert rep is not None and len(calls) == 2      # failed once, retried
+
+    # exhaustion: the old snapshot stays live, the queue is untouched,
+    # and the failure is visible on the metrics channel
+    snap0 = svc.snapshot
+    ins, _ = _clone_inserts(store, obs, "pend", 1, np.random.default_rng(4))
+    svc.submit(inserts=ins)
+
+    def always_dead(snapshot, cids):
+        raise RuntimeError("permanent detection failure")
+
+    svc.planner.redetect = always_dead
+    assert svc.redetect([obs]) is None
+    assert svc.snapshot is snap0 and svc.queue.depth == 1
+    assert svc.metrics.channel("redetect.failures").count == 1
+
+
+def test_drift_tracker_thresholds_and_rebaseline():
+    store, svc = _service(40, seed=6)
+    fg = svc.snapshot.fgraph
+    obs = store.dict.lookup("ssn:Observation")
+    tr = DriftTracker(raw_residue_threshold=10**6,
+                      support_drift_threshold=3)
+    tr.prime(fg)
+    assert tr.dirty_classes(fg) == []
+
+    class FakeUpdate:
+        touched_classes = (obs,)
+        per_class = {obs: {"new_surrogates": 2}}
+
+    tr.observe_update(FakeUpdate())
+    assert tr.dirty_classes(fg) == []               # 2 < 3: below threshold
+    st_del = DeleteStats()
+    st_del.note_class(obs, "exits", 1)
+    tr.observe_delete(st_del)
+    assert tr.dirty_classes(fg) == [obs]            # 2 + 1 crosses it
+    tr.note_redetected(fg, [obs])
+    assert tr.dirty_classes(fg) == []               # re-baselined
+
+
+# ---------------------------------------------------------------------------
+# metrics channels
+# ---------------------------------------------------------------------------
+
+def test_metrics_channel_accumulators():
+    ch = Channel("x")
+    for v in (3.0, 1.0, 2.0):
+        ch.observe(v)
+    assert ch.last == 2.0 and ch.count == 3 and ch.total == 6.0
+    assert ch.min == 1.0 and ch.max == 3.0 and ch.mean == 2.0
+    s = ch.summary()
+    assert s["count"] == 3 and s["mean"] == 2.0 and s["last"] == 2.0
+
+    hub = MetricsHub()
+    hub.observe("b.two", 1)
+    hub.observe("a.one", 5)
+    hub.observe("a.one", 7)
+    summ = hub.summary()
+    assert list(summ) == ["a.one", "b.two"]         # sorted export
+    assert summ["a.one"]["count"] == 2 and summ["a.one"]["last"] == 7
+
+
+def test_service_exports_expected_channels():
+    store, svc = _service(60, seed=11, support_drift_threshold=4,
+                          raw_residue_threshold=10**6)
+    cid = next(iter(svc.snapshot.fgraph.tables))   # a factorized class
+    ins, _ = _novel_inserts(store, cid, "chan", 4)
+    svc.submit(inserts=ins)
+    svc.drain()
+    summ = svc.metrics_summary()
+    for name in ("queue.depth", "ingest.batch_ms", "swap.count",
+                 "redetect.ms", "redetect.dirty_classes"):
+        assert name in summ, name
+    assert any(k.startswith("savings.") for k in summ)
+
+
+# ---------------------------------------------------------------------------
+# incremental == batch: random interleavings (property test)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       ops=st.lists(st.tuples(st.integers(0, 2),      # reuse inserts
+                              st.integers(0, 3),      # novel inserts
+                              st.booleans()),         # delete earlier?
+                    min_size=1, max_size=4))
+def test_interleaved_edits_digest_parity(seed, ops):
+    """Any interleaving of update/delete batches through the online
+    service (auto re-detection on) leaves a final state expand()-digest
+    identical to a single-batch from-scratch compaction of the net
+    graph -- deletes drive support below payoff, so the interleavings
+    exercise payoff-sweep decompaction too."""
+    store, svc = _service(30, seed=4, support_drift_threshold=3,
+                          raw_residue_threshold=4)
+    rng = np.random.default_rng(seed)
+    cids = [store.dict.lookup("ssn:Observation"),
+            store.dict.lookup("ssn:Measurement")]
+    inserted: list[str] = []
+    for b, (n_reuse, n_novel, do_delete) in enumerate(ops):
+        cid = cids[b % 2]
+        ins = []
+        if n_reuse:
+            tri, names = _clone_inserts(store, cid, f"{seed}/{b}",
+                                        n_reuse, rng)
+            ins += tri
+            inserted += names
+        if n_novel:
+            tri, names = _novel_inserts(store, cid, f"{seed}/{b}", n_novel)
+            ins += tri
+            inserted += names
+        if ins:
+            svc.submit(inserts=ins)
+        if do_delete and inserted:
+            k = min(len(inserted), 3)
+            dels = [inserted.pop(int(rng.integers(0, len(inserted))))
+                    for _ in range(k)]
+            svc.submit(delete_entities=dels)
+        svc.drain()
+    assert svc.queue.depth == 0
+    comp = Compactor(detector="gfsp", backend="host")
+    comp.run(svc.snapshot.fgraph.expand())
+    assert comp.snapshot.digest() == svc.snapshot.digest()

@@ -309,3 +309,21 @@ def test_graph_query_service_endpoint():
     assert outs["factorized"][2].n_rows == 0          # unknown term
     assert outs["factorized"][0].n_rows > 0
     assert set(outs["factorized"][1].var_props) == {term(t.props[0])}
+
+
+def test_core_reset_clears_query_exec_counters():
+    """Regression: ``core.sweep.reset_trace_stats()`` must also zero the
+    query-layer QUERY_EXEC counters (the query module registers its
+    reset hook centrally), so per-cell bench accounting resets with ONE
+    call and online soak counters never bleed across phases."""
+    QUERY_EXEC["lowerings"] = 5
+    QUERY_EXEC["batches"] = 3
+    core_sweep.reset_trace_stats()
+    assert QUERY_EXEC == {"lowerings": 0, "batches": 0}
+    # the registration is idempotent: re-registering must not stack
+    from repro.core.sweep import register_stats_reset
+    from repro.query.batch import reset_query_stats as rqs
+    register_stats_reset(rqs)
+    register_stats_reset(rqs)
+    from repro.core.sweep import _EXTRA_STAT_RESETS
+    assert _EXTRA_STAT_RESETS.count(rqs) == 1
