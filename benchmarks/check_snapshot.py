@@ -25,7 +25,16 @@ Asserts the structural invariants the bench-smoke job exists to protect:
    workload of the frequent-pattern-heavy class (the paper's "queries
    get faster on G'" claim), and the batched device query path does not
    retrace warm.
-6. **Online compaction pays** -- the drift matrix from the
+6. **The BGP engine pays** -- every cell of every multi-star workload
+   returns the identical binding-set digest (planner == fixed-raw ==
+   fixed-factorized == batched-device, filters pushed or post-hoc); the
+   batched join path does not retrace warm; the factorized 2-star join
+   runs at molecule granularity (its max intermediate strictly below
+   raw's entity-level frontier -- AMI x AMI, not AM x AM); pushed-down
+   filters are no slower than post-hoc filtering of the identical
+   queries; and the cost-based planner's warm latency on the mixed
+   workload is no worse than either fixed strategy.
+7. **Online compaction pays** -- the drift matrix from the
    ``launch/serve.py --online`` soak must show a drained write-ahead
    queue, zero warm retraces on forced re-detection, a service edge
    count never above the no-recompaction twin, per-pass realized-edge
@@ -129,6 +138,7 @@ def check(path: str = DEFAULT_PATH) -> list[str]:
                 f"expected exactly 1.0 (candidate batching regressed)")
 
     errors.extend(check_query(snap.get("query")))
+    errors.extend(check_bgp(snap.get("bgp")))
     errors.extend(check_drift(snap.get("drift")))
     return errors
 
@@ -175,8 +185,78 @@ def check_query(query: dict | None) -> list[str]:
     return errors
 
 
+def check_bgp(bgp: dict | None) -> list[str]:
+    """Gate the multi-star BGP matrix (see module docstring, item 6)."""
+    errors: list[str] = []
+    if not bgp:
+        errors.append("snapshot has no bgp matrix (rerun --snapshot)")
+        return errors
+    workloads = bgp.get("workloads", {})
+    for wname, cells in workloads.items():
+        by_key = {(c["strategy"], c["backend"]): c for c in cells}
+        ref = cells[0]
+        for c in cells[1:]:
+            if c["digest"] != ref["digest"] or c["n_rows"] != ref["n_rows"]:
+                errors.append(
+                    f"bgp[{wname}] binding-set parity broken: "
+                    f"{c['strategy']}x{c['backend']} digest/rows "
+                    f"{c['digest']}/{c['n_rows']} != "
+                    f"{ref['digest']}/{ref['n_rows']}")
+        for (strat, be), c in by_key.items():
+            if be == "device" and c.get("trace_count_warm", 0) != 0:
+                errors.append(
+                    f"bgp[{wname}] {strat}x{be} retraced on the warm "
+                    f"pass ({c['trace_count_warm']} traces)")
+        if wname == "2star":
+            raw = by_key.get(("raw", "host"))
+            fact = by_key.get(("factorized", "host"))
+            if raw and fact:
+                if fact["max_intermediate"] >= raw["max_intermediate"]:
+                    errors.append(
+                        f"bgp[2star] factorized intermediate "
+                        f"{fact['max_intermediate']} not below raw's "
+                        f"{raw['max_intermediate']} (molecule-level join "
+                        f"-- AMI x AMI -- regressed to entity level)")
+            else:
+                errors.append("bgp[2star] missing raw/factorized host "
+                              "cells")
+        if wname == "filter":
+            push = by_key.get(("factorized", "host"))
+            post = by_key.get(("posthoc", "host"))
+            if push and post:
+                post_ms = max(post["exec_time_ms_warm"], MIN_HOST_MS)
+                if push["exec_time_ms_warm"] > post_ms:
+                    errors.append(
+                        f"bgp[filter] pushed-down filtering is slower "
+                        f"than post-hoc: {push['exec_time_ms_warm']:.1f} "
+                        f"ms > {post_ms:.1f} ms (pushdown regressed)")
+            else:
+                errors.append("bgp[filter] missing pushed/posthoc cells")
+        if wname == "mixed":
+            plan = by_key.get(("planner", "host"))
+            raw = by_key.get(("raw", "host"))
+            fact = by_key.get(("factorized", "host"))
+            if plan and raw and fact:
+                best = max(min(raw["exec_time_ms_warm"],
+                               fact["exec_time_ms_warm"]), MIN_HOST_MS)
+                if plan["exec_time_ms_warm"] > best:
+                    errors.append(
+                        f"bgp[mixed] planner warm "
+                        f"{plan['exec_time_ms_warm']:.1f} ms is worse "
+                        f"than the best fixed strategy {best:.1f} ms "
+                        f"(cost model no longer pays for itself)")
+            else:
+                errors.append("bgp[mixed] missing planner/raw/factorized "
+                              "host cells")
+    for wname in ("lookup", "var_arm", "filter", "2star", "3star",
+                  "mixed"):
+        if wname not in workloads:
+            errors.append(f"bgp matrix missing workload {wname!r}")
+    return errors
+
+
 def check_drift(drift: dict | None) -> list[str]:
-    """Gate the online-compaction drift matrix (module docstring, item 6)."""
+    """Gate the online-compaction drift matrix (module docstring, item 7)."""
     errors: list[str] = []
     if not drift:
         errors.append("snapshot has no drift matrix (rerun --snapshot)")

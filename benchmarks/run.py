@@ -1,6 +1,7 @@
 """Benchmark driver: one module per paper table/figure + kernel micro +
 the distributed-FSP roofline cell + the detector x backend perf snapshot
 + the star-query latency matrix (raw vs factorized x host/device)
++ the multi-star BGP matrix (cost-based planner vs fixed strategies)
 + the online-compaction drift matrix (soak via ``launch/serve.py``).
 
     python -m benchmarks.run [--fast]        # full paper suite
@@ -106,6 +107,7 @@ def snapshot(fast: bool = True) -> dict:
             for k, v in sorted(bucket_shapes.items())},
         "cells": cells,
         "query": query_matrix(fast=fast),
+        "bgp": bgp_matrix(fast=fast),
         "drift": drift_matrix(fast=fast),
     }
     with open(SNAPSHOT_PATH, "w") as f:
@@ -229,6 +231,151 @@ def query_matrix(fast: bool = True) -> dict:
                   f"cold {c['exec_time_ms']:8.1f} ms  "
                   f"warm {c['exec_time_ms_warm']:8.1f} ms  "
                   f"({base / max(c['exec_time_ms_warm'], 1e-9):4.2f}x raw) "
+                  f"rows={c['n_rows']} digest={c['digest']}")
+    return out
+
+
+def bgp_matrix(fast: bool = True) -> dict:
+    """Multi-star BGP matrix: planner vs fixed strategies x host/device.
+
+    Six workloads over the sensor graph WITH ssn:Sensor metadata stars
+    (so cross-star joins have a factorizable class on both sides):
+    molecule ``lookup``s, ``var_arm`` scans, pushed-down value
+    ``filter``s (plus a post-hoc cell over the identical queries),
+    molecule-to-molecule ``2star`` joins, ``3star`` chains, and a
+    ``mixed`` bag spanning all shapes.  Gated invariants
+    (``benchmarks.check_snapshot``): every cell of a workload returns
+    the identical binding-set digest; the batched device join path does
+    not retrace warm; the factorized ``2star`` intermediate is bounded
+    by molecule counts (AMI x AMI) strictly below raw's entity-level
+    frontier; pushed-down filtering beats post-hoc; and the cost-based
+    planner's warm latency on ``mixed`` is no worse than EITHER fixed
+    strategy -- the per-star choice must pay for itself.
+    """
+    from repro.api import Compactor
+    from repro.core import sweep as core_sweep
+    from repro.data.synthetic import (MEASUREMENT, OBSERVATION, P_MODEL,
+                                      P_PROCEDURE, P_RESULT, P_VALUE,
+                                      SENSOR, SensorGraphSpec, generate)
+    from repro.query import BGPQuery, Filter, QueryEngine, StarPattern
+
+    n_obs = 4_000 if fast else 20_000
+    store = generate(SensorGraphSpec(n_observations=n_obs, seed=42,
+                                     include_sensor_metadata=True))
+    comp = Compactor(detector="gfsp", backend="host")
+    comp.run(store)
+    fg = comp.fgraph
+    eng = QueryEngine(fg)
+    eng.raw_store         # build the expanded baseline outside the timers
+    d = store.dict
+    obs, meas, sen = (d.lookup(t) for t in (OBSERVATION, MEASUREMENT,
+                                            SENSOR))
+    p_proc, p_model, p_res, p_val = (
+        d.lookup(t) for t in (P_PROCEDURE, P_MODEL, P_RESULT, P_VALUE))
+
+    lookups = [
+        BGPQuery(stars=(StarPattern(
+            "?s", tuple((int(p), int(o)) for p, o in zip(t.props, row)),
+            class_id=cid),))
+        for cid, t in sorted(fg.tables.items()) for row in t.objects[:48]]
+    var_arm = [
+        BGPQuery(stars=(StarPattern(
+            "?s", ((int(t.props[0]), int(row[0])),
+                   (int(t.props[-1]), "?v")), class_id=cid),))
+        for cid, t in sorted(fg.tables.items()) for row in t.objects[:16]]
+    # raw's home turf: var arms over the residual (off-SP) property --
+    # distinct var labels keep the queries (and their cache entries)
+    # separate while probing the same shape
+    residual = [BGPQuery(stars=(StarPattern(
+        f"?o{i}", ((p_res, f"?m{i}"),), class_id=obs),))
+        for i in range(3)]
+    joins2 = [
+        BGPQuery(stars=(
+            StarPattern("?o", ((p_proc, "?s"),), class_id=obs),
+            StarPattern("?s", ((p_model, d.lookup(f"model/{m}")),),
+                        class_id=sen)))
+        for m in range(3)]
+    chains3 = [
+        BGPQuery(stars=(
+            StarPattern("?o", ((p_proc, "?s"), (p_res, "?m")),
+                        class_id=obs),
+            StarPattern("?s", ((p_model, d.lookup(f"model/{m}")),),
+                        class_id=sen),
+            StarPattern("?m", ((p_val, "?v"),), class_id=meas)))
+        for m in range(3)]
+    # pushed-down value filters riding the 3-star chain: the pushed form
+    # prunes measurement molecules BEFORE the joins, post-hoc carries
+    # the full join frontier to the end
+    filtered = [
+        BGPQuery(stars=q.stars,
+                 filters=(Filter("?v", op, d.lookup(f"val/{k}")),))
+        for q in chains3 for op in ("<", ">=") for k in (2, 6)]
+    # every shape is represented; weights follow the serving mix the
+    # README describes (lookup-dominated with a steady join/scan tail)
+    mixed = (lookups[:24] + var_arm[:8] + residual + joins2 * 2
+             + filtered[:2])
+
+    def _digest(results) -> str:
+        h = hashlib.sha1()
+        for b in results:
+            h.update(b.canonical().tobytes())
+        return h.hexdigest()[:16]
+
+    def _cell(workload, label, strategy, backend, posthoc=False):
+        def run_once():
+            out, mi = [], 0
+            for q in workload:
+                b, stq = eng.query_bgp(q, strategy=strategy,
+                                       backend=backend,
+                                       posthoc_filters=posthoc,
+                                       return_stats=True)
+                out.append(b)
+                mi = max(mi, stq["max_intermediate"])
+            return out, mi
+        core_sweep.reset_trace_stats()
+        t0 = time.perf_counter()
+        res, mi = run_once()
+        cold = (time.perf_counter() - t0) * 1e3
+        traces_cold = core_sweep.trace_count()
+        t0 = time.perf_counter()
+        res, mi = run_once()
+        warm = (time.perf_counter() - t0) * 1e3
+        return {
+            "strategy": label, "backend": backend,
+            "exec_time_ms": round(cold, 3),
+            "exec_time_ms_warm": round(warm, 3),
+            "trace_count_cold": traces_cold,
+            "trace_count_warm": core_sweep.trace_count() - traces_cold,
+            "n_queries": len(workload),
+            "n_rows": int(sum(b.n_rows for b in res)),
+            "max_intermediate": int(mi),
+            "digest": _digest(res),
+        }
+
+    out: dict = {
+        "graph": {"n_observations": n_obs, "n_triples": store.n_triples,
+                  "seed": 42, "sensor_metadata": True},
+        "workloads": {},
+    }
+    for wname, workload in (("lookup", lookups), ("var_arm", var_arm),
+                            ("filter", filtered), ("2star", joins2),
+                            ("3star", chains3), ("mixed", mixed)):
+        cells = [
+            _cell(workload, "planner", "auto", "host"),
+            _cell(workload, "raw", "raw", "host"),
+            _cell(workload, "factorized", "factorized", "host"),
+            _cell(workload, "factorized", "factorized", "device"),
+        ]
+        if wname == "filter":       # identical queries, filters applied last
+            cells.append(_cell(workload, "posthoc", "factorized", "host",
+                               posthoc=True))
+        out["workloads"][wname] = cells
+        for c in cells:
+            tag = f"{c['strategy']}x{c['backend']}"
+            print(f"bgp {wname:8s} {tag:18s} "
+                  f"cold {c['exec_time_ms']:8.1f} ms  "
+                  f"warm {c['exec_time_ms_warm']:8.1f} ms  "
+                  f"maxint={c['max_intermediate']:<7d} "
                   f"rows={c['n_rows']} digest={c['digest']}")
     return out
 

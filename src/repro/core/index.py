@@ -119,7 +119,8 @@ class GraphIndex:
     """Immutable per-predicate CSR index over an (n, 3) triple array."""
 
     __slots__ = ("rows", "preds", "starts", "type_id", "instance_of_id",
-                 "_ents_cache", "_props_cache", "_classes_cache")
+                 "_ents_cache", "_props_cache", "_classes_cache",
+                 "_objsort_cache")
 
     def __init__(self, spo: np.ndarray, type_id: int, instance_of_id: int,
                  *, _presorted: bool = False) -> None:
@@ -139,6 +140,7 @@ class GraphIndex:
         self._ents_cache: dict[int, np.ndarray] = {}
         self._props_cache: dict[int, np.ndarray] = {}
         self._classes_cache: np.ndarray | None = None
+        self._objsort_cache: dict[int, np.ndarray] = {}
 
     @property
     def n_rows(self) -> int:
@@ -151,6 +153,31 @@ class GraphIndex:
         if i >= self.preds.shape[0] or self.preds[i] != p:
             return self.rows[:0]
         return self.rows[self.starts[i]:self.starts[i + 1]]
+
+    # -- selectivity -------------------------------------------------------
+    def pred_count(self, p: int) -> int:
+        """Row count of a predicate's vertical partition: the size of
+        the slice a raw ground-arm scan pays -- a planner cost input."""
+        i = int(np.searchsorted(self.preds, p))
+        if i >= self.preds.shape[0] or self.preds[i] != p:
+            return 0
+        return int(self.starts[i + 1] - self.starts[i])
+
+    def pred_objects_sorted(self, p: int) -> np.ndarray:
+        """Sorted object column of one predicate (cached): two binary
+        searches answer any equality or range selectivity probe."""
+        arr = self._objsort_cache.get(int(p))
+        if arr is None:
+            arr = np.sort(self.pred_slice(p)[:, 2].astype(np.int64))
+            self._objsort_cache[int(p)] = arr
+        return arr
+
+    def pred_object_count(self, p: int, o: int) -> int:
+        """Triples matching ``(?s p o)`` -- the ground-arm selectivity
+        numerator, O(log) off the sorted-object cache."""
+        arr = self.pred_objects_sorted(p)
+        return int(np.searchsorted(arr, o, side="right")
+                   - np.searchsorted(arr, o, side="left"))
 
     # -- class / schema ----------------------------------------------------
     def entities_of_class(self, class_id: int) -> np.ndarray:

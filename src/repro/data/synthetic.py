@@ -27,6 +27,7 @@ PHENOMENA = ["Temperature", "WindSpeed", "WindDirection", "RelativeHumidity",
 
 OBSERVATION = "ssn:Observation"
 MEASUREMENT = "ssn:Measurement"
+SENSOR = "ssn:Sensor"
 P_PROPERTY = "ssn:observedProperty"
 P_PROCEDURE = "ssn:procedure"
 P_GENERATED_BY = "ssn:generatedBy"
@@ -34,6 +35,8 @@ P_TIME = "ssn:samplingTime"
 P_RESULT = "ssn:observationResult"
 P_VALUE = "ssn:value"
 P_UNIT = "ssn:unit"
+P_MODEL = "ssn:model"
+P_LOCATION = "ssn:location"
 
 # Table 2 property sets
 PROPERTY_SETS = {
@@ -59,6 +62,12 @@ class SensorGraphSpec:
     zipf_a: float = 1.8           # value repetition skew (Fig. 8 shape)
     seed: int = 0
     include_result_links: bool = True
+    # ssn:Sensor metadata stars (model/location over a few shared
+    # tuples): gives cross-star BGPs a second *factorizable* class on
+    # the far side of ``procedure``, so Observation-Sensor joins are
+    # molecule-to-molecule (AMI x AMI).  Off by default -- the
+    # single-star BENCH/test numbers predate it.
+    include_sensor_metadata: bool = False
 
 
 def generate(spec: SensorGraphSpec) -> TripleStore:
@@ -85,6 +94,14 @@ def generate(spec: SensorGraphSpec) -> TripleStore:
         triples.append((meas, "rdf:type", MEASUREMENT))
         triples.append((meas, P_VALUE, f"val/{vals[i]}"))
         triples.append((meas, P_UNIT, f"unit/{PHENOMENA[phen[i]]}"))
+    if spec.include_sensor_metadata:
+        # few distinct (model, location) tuples over many sensors ->
+        # high-multiplicity Sensor molecules
+        for s in range(spec.n_sensors):
+            sens = f"sensor/{s}"
+            triples.append((sens, "rdf:type", SENSOR))
+            triples.append((sens, P_MODEL, f"model/{s % 3}"))
+            triples.append((sens, P_LOCATION, f"site/{s % 4}"))
     return TripleStore.from_triples(triples)
 
 

@@ -17,10 +17,18 @@ variable-object arms, misses) run under both the ``factorized`` and
 latency of each strategy is reported.
 
     PYTHONPATH=src python -m repro.launch.serve --graph-queries 64
+
+``--bgp N`` exercises the full BGP engine: N multi-star queries (cross-
+star joins over ``procedure``/``observationResult``, pushed-down value
+filters) served under the cost-based planner and both fixed strategies,
+with binding sets asserted identical across all three.
+
+    PYTHONPATH=src python -m repro.launch.serve --bgp 24
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
@@ -95,6 +103,83 @@ def serve_graph_queries(n_requests: int, *, n_observations: int = 600,
             "factorized_ms": timings["factorized"]}
 
 
+def serve_bgp_queries(n_requests: int, *, n_observations: int = 600,
+                      seed: int = 0, backend: str = "host") -> dict:
+    """Serve multi-star BGP queries through the cost-based BGP engine.
+
+    Each request is a join-bearing BGP (observation-sensor over
+    ``procedure``, observation-measurement over ``observationResult``,
+    or a filtered single star); the wave runs once per strategy
+    (``auto`` / ``raw`` / ``factorized``) and the binding sets are
+    asserted identical -- the planner may pick a different per-star mix
+    per query, but the answers cannot differ (Def. 4.10).
+    """
+    from repro.api import Compactor
+    from repro.data.synthetic import (MEASUREMENT, OBSERVATION,
+                                      P_MODEL, P_PROCEDURE, P_RESULT,
+                                      P_TIME, P_VALUE, SENSOR,
+                                      SensorGraphSpec, generate)
+    from repro.serving import BGPQueryRequest
+
+    store = generate(SensorGraphSpec(n_observations=n_observations,
+                                     seed=seed,
+                                     include_sensor_metadata=True))
+    comp = Compactor(detector="gfsp", backend="host")
+    comp.run(store)
+    fg = comp.fgraph
+    rng = np.random.default_rng(seed)
+
+    def make(rid: int) -> BGPQueryRequest:
+        kind = rid % 3
+        if kind == 0:       # obs-sensor molecule-to-molecule join
+            stars = (("?o", ((P_PROCEDURE, "?s"),
+                             (P_TIME, f"time/{rng.integers(0, 50)}")),
+                      OBSERVATION),
+                     ("?s", ((P_MODEL, f"model/{rng.integers(0, 3)}"),),
+                      SENSOR))
+            return BGPQueryRequest(rid=rid, stars=stars)
+        if kind == 1:       # 3-star chain with a pushed-down filter
+            stars = (("?o", ((P_PROCEDURE, "?s"), (P_RESULT, "?m")),
+                      OBSERVATION),
+                     ("?s", ((P_MODEL, f"model/{rng.integers(0, 3)}"),),
+                      SENSOR),
+                     ("?m", ((P_VALUE, "?v"),), MEASUREMENT))
+            return BGPQueryRequest(
+                rid=rid, stars=stars,
+                filters=(("?v", "<", f"val/{rng.integers(2, 9)}"),))
+        stars = (("?m", ((P_VALUE, "?v"),), MEASUREMENT),)
+        return BGPQueryRequest(
+            rid=rid, stars=stars,
+            filters=(("?v", "==", f"val/{rng.integers(0, 6)}"),))
+
+    reqs = [make(rid) for rid in range(n_requests)]
+    results, timings = {}, {}
+    for strategy in ("raw", "factorized", "auto"):
+        svc = GraphQueryService(fg, backend=backend)
+        svc.engine.raw_store    # build the baseline outside the timer
+        for r in reqs:
+            svc.submit(dataclasses.replace(r, strategy=strategy))
+        t0 = time.perf_counter()
+        results[strategy] = svc.run()
+        timings[strategy] = (time.perf_counter() - t0) * 1e3
+    planner_mix = {"raw": 0, "factorized": 0}
+    for rid in range(n_requests):
+        a, b, c = (results[s][rid] for s in ("raw", "factorized", "auto"))
+        assert sorted(a.rows) == sorted(b.rows) == sorted(c.rows), rid
+        for s in c.strategies:
+            planner_mix[s] += 1
+    n_rows = sum(r.n_rows for r in results["auto"].values())
+    print(f"bgp endpoint: {n_requests} multi-star queries, "
+          f"{n_rows} bindings -- raw {timings['raw']:.1f} ms, "
+          f"factorized {timings['factorized']:.1f} ms, "
+          f"planner {timings['auto']:.1f} ms "
+          f"(identical binding sets; planner mix {planner_mix})")
+    return {"n_requests": n_requests, "n_rows": n_rows,
+            "raw_ms": timings["raw"],
+            "factorized_ms": timings["factorized"],
+            "auto_ms": timings["auto"], "planner_mix": planner_mix}
+
+
 def serve_online(n_batches: int = 20, *, n_observations: int = 80,
                  seed: int = 0, backend: str = "device",
                  assert_gates: bool = True) -> dict:
@@ -133,9 +218,13 @@ def serve_online(n_batches: int = 20, *, n_observations: int = 80,
 
     store = generate(SensorGraphSpec(n_observations=n_observations,
                                      seed=seed))
+    # max_backoff=1: the drift cohort's re-plan is rejected until enough
+    # singletons accumulate, and a deep rejection backoff would push the
+    # eventually-accepted pass past this soak's short horizon
     svc = OnlineCompactionService(store, detector="gfsp", backend=backend,
                                   raw_residue_threshold=6,
-                                  support_drift_threshold=4)
+                                  support_drift_threshold=4,
+                                  max_backoff=1)
     base = OnlineCompactionService(store, detector="gfsp", backend=backend,
                                    auto_redetect=False)
     rng = np.random.default_rng(seed)
@@ -283,6 +372,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--graph-queries", type=int, default=0,
                     help="serve N star BGP queries over a compacted RDF "
                          "graph instead of the LM path")
+    ap.add_argument("--bgp", type=int, default=0,
+                    help="serve N multi-star BGP queries (joins + "
+                         "filters) through the cost-based planner")
     ap.add_argument("--graph-backend", default="host",
                     choices=("host", "device"),
                     help="molecule-match backend for --graph-queries")
@@ -296,6 +388,10 @@ def main(argv=None) -> dict:
 
     if args.online:
         return serve_online(args.online_batches, seed=args.seed)
+
+    if args.bgp:
+        return serve_bgp_queries(args.bgp, seed=args.seed,
+                                 backend=args.graph_backend)
 
     if args.graph_queries:
         return serve_graph_queries(args.graph_queries, seed=args.seed,

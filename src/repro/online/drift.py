@@ -50,15 +50,26 @@ class DriftTracker:
     ``prime`` captures baselines from a fresh snapshot;
     ``note_redetected`` re-baselines exactly the classes a redetect pass
     considered, so drift in other classes keeps accumulating.
+
+    A class whose re-detection keeps landing on a hill-climb-rejected
+    plan (the realized-edges guard in ``CompactionPlanner.redetect``)
+    **backs off exponentially**: each rejection doubles its effective
+    thresholds (capped at ``2**max_backoff``), so the service stops
+    paying a full sweep every pass for a class whose drift pattern keeps
+    proposing the same regressive re-plan.  An accepted re-detection
+    resets the backoff to zero.
     """
 
     def __init__(self, *, raw_residue_threshold: int = 8,
-                 support_drift_threshold: int = 4) -> None:
+                 support_drift_threshold: int = 4,
+                 max_backoff: int = 6) -> None:
         self.raw_residue_threshold = int(raw_residue_threshold)
         self.support_drift_threshold = int(support_drift_threshold)
+        self.max_backoff = int(max_backoff)
         self._baseline: dict[int, int] = {}      # cid -> residue at detect
         self._support_drift: dict[int, int] = {}  # cid -> accumulated decay
         self._touched: set[int] = set()           # cids edited since prime
+        self._backoff: dict[int, int] = {}        # cid -> rejection count
 
     # -- lifecycle ---------------------------------------------------------
     def prime(self, fg: FactorizedGraph) -> None:
@@ -68,13 +79,26 @@ class DriftTracker:
         self._support_drift = {}
         self._touched = set()
 
-    def note_redetected(self, fg: FactorizedGraph, class_ids) -> None:
-        """Re-baseline the classes a redetect pass just considered."""
+    def note_redetected(self, fg: FactorizedGraph, class_ids,
+                        rejected: bool = False) -> None:
+        """Re-baseline the classes a redetect pass just considered.
+
+        ``rejected=True`` marks a pass the realized-edges hill-climb
+        guard refused: the classes' backoff levels increment (their
+        effective thresholds double, up to ``2**max_backoff``), so a
+        class that keeps proposing a regressive re-plan must accumulate
+        exponentially more drift before being re-evaluated.  An accepted
+        pass resets the backoff."""
         for c in class_ids:
             cid = int(c)
             self._baseline[cid] = raw_residue(fg, cid)
             self._support_drift.pop(cid, None)
             self._touched.discard(cid)
+            if rejected:
+                self._backoff[cid] = min(self._backoff.get(cid, 0) + 1,
+                                         self.max_backoff)
+            else:
+                self._backoff.pop(cid, None)
 
     # -- incremental feeds -------------------------------------------------
     def observe_update(self, report) -> None:
@@ -110,15 +134,23 @@ class DriftTracker:
         cid = int(class_id)
         return raw_residue(fg, cid) - self._baseline.get(cid, 0)
 
+    def backoff(self, class_id: int) -> int:
+        """Consecutive rejected re-detections of a class (capped)."""
+        return self._backoff.get(int(class_id), 0)
+
     def dirty_classes(self, fg: FactorizedGraph) -> list[int]:
         """Classes whose accumulated drift crossed a threshold -- the
         ONLY classes the re-detection loop will re-evaluate.  Probes
         touched classes exclusively (cached index lookups), so the check
-        itself is proportional to the edited set, not the graph."""
+        itself is proportional to the edited set, not the graph.
+        Per-class thresholds scale by ``2**backoff``: repeatedly
+        rejected classes need exponentially more drift to go dirty."""
         dirty = []
         for cid in sorted(self._touched):
-            if self.support_drift(cid) >= self.support_drift_threshold \
+            scale = 1 << self.backoff(cid)
+            if self.support_drift(cid) \
+                    >= self.support_drift_threshold * scale \
                     or self.residue_growth(fg, cid) \
-                    >= self.raw_residue_threshold:
+                    >= self.raw_residue_threshold * scale:
                 dirty.append(cid)
         return dirty

@@ -80,12 +80,15 @@ class OnlineCompactionService:
                  drift: DriftTracker | None = None,
                  raw_residue_threshold: int = 8,
                  support_drift_threshold: int = 4,
+                 max_backoff: int = 6,
                  metrics: MetricsHub | None = None,
                  monitor: fault.Monitor | None = None,
                  redetect_deadline_s: float = 30.0,
                  retry_attempts: int = 3, retry_base_s: float = 0.01,
                  retry_sleep=None,
-                 auto_redetect: bool = True) -> None:
+                 auto_redetect: bool = True,
+                 coalesce: bool = True,
+                 max_coalesce: int | None = None) -> None:
         self.planner = planner or CompactionPlanner(
             detector, backend,
             min_predicted_savings=min_predicted_savings)
@@ -101,7 +104,8 @@ class OnlineCompactionService:
         self.queue = IngestQueue()
         self.drift = drift or DriftTracker(
             raw_residue_threshold=raw_residue_threshold,
-            support_drift_threshold=support_drift_threshold)
+            support_drift_threshold=support_drift_threshold,
+            max_backoff=max_backoff)
         self.drift.prime(snap.fgraph)
         self.metrics = metrics or MetricsHub()
         self.monitor = monitor or fault.Monitor(
@@ -113,6 +117,8 @@ class OnlineCompactionService:
         self._retry_sleep = retry_sleep if retry_sleep is not None \
             else time.sleep
         self.auto_redetect = bool(auto_redetect)
+        self.coalesce = bool(coalesce)
+        self.max_coalesce = max_coalesce
         self.swap_count = 0
         self._swap_lock = threading.Lock()
         self._redetect_step = 0
@@ -174,27 +180,43 @@ class OnlineCompactionService:
         self.metrics.observe("swap.count", self.swap_count)
 
     def step(self) -> BatchReport | None:
-        """Apply the head batch (if any): build the successor snapshot,
-        swap, commit the queue head, then re-detect drifted classes."""
-        batch = self.queue.peek()
-        if batch is None:
+        """Apply the head batch -- or, with coalescing on, the maximal
+        head run of insert-only batches (plus at most one terminating
+        delete-carrying batch) merged into ONE apply: build the
+        successor snapshot, swap, commit the run, then re-detect
+        drifted classes."""
+        if self.coalesce:
+            batches = self.queue.peek_coalesced(self.max_coalesce)
+        else:
+            head = self.queue.peek()
+            batches = [head] if head is not None else []
+        if not batches:
             return None
         t0 = time.perf_counter()
         snap = self._snapshot
         epoch_before = snap.epoch
+        # Merge the run: inserts concatenate in FIFO order; only the
+        # LAST batch of a coalesced run may carry deletes (peek_coalesced
+        # guarantees it), and within a batch inserts apply before
+        # deletes, so one insert-then-delete apply is order-preserving.
+        last = batches[-1]
+        inserts = (batches[0].inserts if len(batches) == 1
+                   else np.concatenate([b.inserts for b in batches]))
         upd = dele = None
-        if batch.inserts.shape[0]:
-            snap, upd = self.planner.apply_update(snap, batch.inserts)
-        if batch.delete_triples.shape[0] or batch.delete_entities.shape[0]:
+        if inserts.shape[0]:
+            snap, upd = self.planner.apply_update(snap, inserts)
+        if last.delete_triples.shape[0] or last.delete_entities.shape[0]:
             snap, dele = self.planner.apply_delete(
                 snap,
-                triples=(batch.delete_triples
-                         if batch.delete_triples.shape[0] else None),
-                entities=(batch.delete_entities
-                          if batch.delete_entities.shape[0] else None))
+                triples=(last.delete_triples
+                         if last.delete_triples.shape[0] else None),
+                entities=(last.delete_entities
+                          if last.delete_entities.shape[0] else None))
         if snap is not self._snapshot:
             self._swap(snap)
-        self.queue.mark_applied(batch.seq)     # commit point: swap landed
+        # commit point: swap landed; drop the whole run in order
+        self.queue.mark_applied_through([b.seq for b in batches])
+        self.metrics.observe("ingest.coalesced_batches", len(batches))
         if upd is not None:
             self.drift.observe_update(upd)
         if dele is not None:
@@ -207,7 +229,7 @@ class OnlineCompactionService:
             dirty = self.drift.dirty_classes(self._snapshot.fgraph)
             if dirty:
                 red = self.redetect(dirty)
-        return BatchReport(seq=batch.seq, epoch_before=epoch_before,
+        return BatchReport(seq=last.seq, epoch_before=epoch_before,
                            epoch_after=self._snapshot.epoch,
                            latency_ms=latency, update=upd, delete=dele,
                            redetect=red)
@@ -260,7 +282,10 @@ class OnlineCompactionService:
             self._swap(snap)
         # re-baseline either way: the decision was made against this
         # state; drift re-accumulates before the classes go dirty again
-        self.drift.note_redetected(snap.fgraph, report.considered)
+        # -- but a rejected pass also bumps the classes' backoff, so
+        # repeat offenders need exponentially more drift to re-trigger
+        self.drift.note_redetected(snap.fgraph, report.considered,
+                                   rejected=report.rejected)
         self.metrics.observe("redetect.ms", report.exec_time_ms)
         self.metrics.observe("redetect.dirty_classes", len(cids))
         self.metrics.observe("redetect.descents", report.descents)

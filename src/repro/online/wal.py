@@ -68,6 +68,34 @@ class IngestQueue:
         :meth:`mark_applied` after its snapshot swapped in."""
         return self._batches[0] if self._batches else None
 
+    def peek_coalesced(self, max_batches: int | None = None
+                       ) -> list[IngestBatch]:
+        """Maximal coalescible head run, NOT removed.
+
+        Adjacent insert-only batches merge into one apply; a batch
+        carrying deletes may terminate the run (inside a batch inserts
+        apply before deletes, so ``inserts(0..i) then deletes(i)``
+        preserves the FIFO-apply semantics) but can never be followed.
+        Commit the run with :meth:`mark_applied_through` -- the batches
+        stay write-ahead until then, and a failed merged apply reruns
+        the identical run.
+        """
+        run: list[IngestBatch] = []
+        for b in self._batches:
+            run.append(b)
+            if b.delete_triples.shape[0] or b.delete_entities.shape[0]:
+                break
+            if max_batches is not None and len(run) >= max_batches:
+                break
+        return run
+
+    def mark_applied_through(self, seqs) -> None:
+        """Commit a contiguous head run, in order (each drop goes
+        through :meth:`mark_applied`, so the strict-head discipline --
+        and its out-of-order error -- is unchanged)."""
+        for s in seqs:
+            self.mark_applied(int(s))
+
     def mark_applied(self, seq: int) -> None:
         """Commit point: drop the head batch (and only the head)."""
         if not self._batches or self._batches[0].seq != seq:

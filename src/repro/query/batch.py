@@ -156,6 +156,9 @@ class QueryEngine:
         # a new snapshot epoch can never serve a stale molecule table,
         # and buffers of dropped epochs are evicted on rebind
         self._bufs: dict[tuple[int, int], _TableBuffer] = {}
+        # planner/deferral probe cache (class stats, per-prop deferral
+        # guards) -- valid for one fgraph only, dropped on rebind
+        self._bgp_cache: dict = {}
 
     def rebind(self, fgraph: FactorizedGraph, epoch: int) -> None:
         """Swap in a new snapshot's fgraph.  Old-epoch device buffers
@@ -169,6 +172,7 @@ class QueryEngine:
         self._raw = None
         self._bufs = {k: v for k, v in self._bufs.items()
                       if k[0] == self.epoch}
+        self._bgp_cache = {}
 
     @property
     def raw_store(self):
@@ -191,6 +195,48 @@ class QueryEngine:
             buf = _TableBuffer(self.fgraph.tables[class_id])
             self._bufs[key] = buf
         return buf
+
+    def query_bgp(self, q, strategy: str = "auto", backend: str = "host",
+                  posthoc_filters: bool = False,
+                  return_stats: bool = False):
+        """Answer a multi-star :class:`~repro.query.bgp.BGPQuery`.
+
+        ``strategy="auto"`` runs the cost-based planner per star;
+        ``"raw"`` / ``"factorized"`` pin every star (the old caller
+        flag, kept as an override).  ``backend="device"`` routes every
+        deferred star's molecule match through the batched sweep-bucket
+        lowering -- grouped per class, zero warm retraces.
+        ``posthoc_filters=True`` is the bench baseline: filters applied
+        on fully materialized bindings instead of molecule columns.
+        """
+        from .bgp.exec import execute_bgp
+        from .bgp.planner import plan_bgp
+        plan = plan_bgp(self.fgraph, q, strategy=strategy,
+                        cache=self._bgp_cache)
+        mol_rows = None
+        if backend == "device":
+            QUERY_EXEC["batches"] += 1
+            mol_rows = {}
+            by_class: dict[int, list[int]] = {}
+            for sp in plan.stars:
+                if sp.deferred:
+                    by_class.setdefault(
+                        int(q.stars[sp.index].class_id), []).append(sp.index)
+            for cid, idxs in by_class.items():
+                table = self.fgraph.tables[cid]
+                stacks = [q.stars[i].ground_arms for i in idxs]
+                rows = match_molecules_batch(
+                    self._buffer(cid), table, stacks,
+                    use_kernel=self.use_kernel)
+                for i, r in zip(idxs, rows):
+                    mol_rows[i] = r
+        needs_raw = any(sp.strategy == "raw" for sp in plan.stars)
+        out, stats = execute_bgp(
+            self.fgraph, q, plan,
+            raw_store=self.raw_store if needs_raw else None,
+            mol_rows=mol_rows, posthoc_filters=posthoc_filters)
+        stats["plan"] = plan
+        return (out, stats) if return_stats else out
 
     def query_batch(self, queries, strategy: str = "factorized",
                     backend: str = "host") -> list[Bindings]:

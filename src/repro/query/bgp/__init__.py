@@ -1,0 +1,29 @@
+"""Full BGP engine on the compact form.
+
+Layers (ROADMAP item 1):
+
+* :mod:`algebra`   -- ``StarPattern`` / ``Filter`` / ``BGPQuery`` /
+  ``BGPBindings``: multi-star basic graph patterns with range/equality
+  filters over dictionary ids.
+* :mod:`exec`      -- molecule-granularity execution: deferred subject
+  columns, AMI x AMI cross-star joins, vectorized filter pushdown into
+  molecule object columns, member materialization last.
+* :mod:`planner`   -- the cost model replacing the caller ``strategy=``
+  flag: per-star raw-vs-factorized choice and greedy connected join
+  ordering from AM/AMI ratios and arm/filter selectivities.
+* :mod:`reference` -- the independent semantics oracle used by the
+  property tests.
+
+Entry point for callers: ``repro.query.QueryEngine.query_bgp``.
+"""
+from .algebra import BGPBindings, BGPQuery, Filter, StarPattern, is_var
+from .exec import deferral_eligible, execute_bgp
+from .planner import BGPPlan, StarPlan, plan_bgp
+from .reference import eval_bgp_reference
+
+__all__ = [
+    "BGPBindings", "BGPQuery", "Filter", "StarPattern", "is_var",
+    "deferral_eligible", "execute_bgp",
+    "BGPPlan", "StarPlan", "plan_bgp",
+    "eval_bgp_reference",
+]

@@ -2,6 +2,7 @@
 to shared-prefix KV caches."""
 from .prefix_factorization import (  # noqa: F401
     PrefixPlan, plan_prefix_sharing, prefix_edges_cost)
-from .engine import (Engine, GraphQueryRequest, GraphQueryResponse,  # noqa: F401
+from .engine import (BGPQueryRequest, BGPQueryResponse, Engine,  # noqa: F401
+                     GraphQueryRequest, GraphQueryResponse,
                      GraphQueryService, PREFIX_POLICIES, PrefixPolicy,
                      Request)

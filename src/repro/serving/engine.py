@@ -92,6 +92,29 @@ class GraphQueryResponse:
     n_rows: int
 
 
+@dataclasses.dataclass
+class BGPQueryRequest:
+    """A multi-star BGP at the term level.  Each star is ``(subject,
+    arms, class_term)`` with arms as (property term, object term) pairs;
+    any term starting with ``"?"`` is a variable (subjects must be
+    variables).  ``filters`` are ``(var, op, value term)`` triples with
+    ``op`` one of ``== != < <= > >=``."""
+
+    rid: int
+    stars: tuple[tuple[str, tuple[tuple[str, str], ...], str | None], ...]
+    filters: tuple[tuple[str, str, str], ...] = ()
+    strategy: str = "auto"           # "auto" | "raw" | "factorized"
+
+
+@dataclasses.dataclass
+class BGPQueryResponse:
+    rid: int
+    variables: tuple[str, ...]       # canonical output column order
+    rows: list[tuple[str, ...]]      # decoded bindings, aligned
+    strategies: tuple[str, ...]      # planner's per-star choices
+    n_rows: int
+
+
 class GraphQueryService:
     """Star-query endpoint over a compacted graph (the paper's "queries
     get faster on G'" claim, served).
@@ -103,6 +126,11 @@ class GraphQueryService:
     ``backend="device"``, everything else evaluates on host.  Terms
     unknown to the dictionary yield empty binding sets (nothing can
     match a term the graph has never seen).
+
+    :class:`BGPQueryRequest` entries in the same queue route through the
+    cost-based BGP engine (``repro.query.bgp``): per-star raw-vs-
+    factorized planning, filter pushdown, and molecule-level joins, with
+    deferred stars of a request riding the batched device path.
 
     ``source`` is a *snapshot handle*, any of:
 
@@ -178,6 +206,50 @@ class GraphQueryService:
                 arms.append((pid, oid))
         return StarQuery(arms=tuple(arms), class_id=cid)
 
+    def _compile_bgp(self, req: BGPQueryRequest, fgraph):
+        from repro.query import BGPQuery, Filter, StarPattern
+        from repro.query.bgp import is_var
+        d = fgraph.store.dict
+
+        def enc(t):
+            return t if is_var(t) else d.lookup(t)
+
+        stars = []
+        for subject, arms, class_term in req.stars:
+            cid = None
+            if class_term is not None:
+                cid = d.lookup(class_term)
+                if cid is None:
+                    return None
+            enc_arms = []
+            for p, o in arms:
+                pid, oid = d.lookup(p), enc(o)
+                if pid is None or oid is None:
+                    return None
+                enc_arms.append((pid, oid))
+            stars.append(StarPattern(subject, tuple(enc_arms),
+                                     class_id=cid))
+        filters = []
+        for var, op, value in req.filters:
+            vid = d.lookup(value)
+            if vid is None:
+                return None
+            filters.append(Filter(var, op, vid))
+        return BGPQuery(stars=tuple(stars), filters=tuple(filters))
+
+    def _run_bgp(self, req: BGPQueryRequest, snap) -> BGPQueryResponse:
+        q = self._compile_bgp(req, snap.fgraph)
+        if q is None:        # unknown term: nothing can match it
+            return BGPQueryResponse(req.rid, (), [], (), 0)
+        b, stats = self.engine.query_bgp(
+            q, strategy=req.strategy, backend=self.backend,
+            return_stats=True)
+        term = snap.fgraph.store.dict.term
+        return BGPQueryResponse(
+            rid=req.rid, variables=b.columns,
+            rows=[tuple(term(int(v)) for v in row) for row in b.rows],
+            strategies=stats["plan"].strategies, n_rows=b.n_rows)
+
     def run(self) -> dict[int, GraphQueryResponse]:
         batch, self.queue = self.queue, []
         if not batch:
@@ -188,6 +260,11 @@ class GraphQueryService:
         snap = self._resolve()
         self.engine.rebind(snap.fgraph, snap.epoch)
         term = snap.fgraph.store.dict.term
+        out: dict[int, GraphQueryResponse] = {}
+        bgps = [r for r in batch if isinstance(r, BGPQueryRequest)]
+        batch = [r for r in batch if not isinstance(r, BGPQueryRequest)]
+        for req in bgps:      # multi-star: planned + joined per request
+            out[req.rid] = self._run_bgp(req, snap)
         compiled = [(req, self._compile(req, snap.fgraph)) for req in batch]
         # factorized queries of the wave evaluate as ONE batch (device
         # backend: one molecule-match lowering per class chunk)
@@ -196,7 +273,6 @@ class GraphQueryService:
         results = self.engine.query_batch([q for _, q in fact],
                                           backend=self.backend)
         by_rid = {req.rid: b for (req, _), b in zip(fact, results)}
-        out: dict[int, GraphQueryResponse] = {}
         for req, q in compiled:
             if q is None:
                 out[req.rid] = GraphQueryResponse(

@@ -1,0 +1,388 @@
+"""Full BGP engine tests: algebra validation, molecule-level joins,
+filter pushdown, the cost-based planner, strategy parity under random
+multi-star queries (hypothesis), the batched device join path, and the
+serving endpoint."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import Compactor
+from repro.core.triples import TripleStore
+from repro.data.synthetic import (MEASUREMENT, OBSERVATION, P_MODEL,
+                                  P_PROCEDURE, P_RESULT, P_TIME, P_VALUE,
+                                  SENSOR, SensorGraphSpec, generate)
+from repro.query import (BGPQuery, Filter, QueryEngine, StarPattern,
+                         eval_bgp_reference, plan_bgp)
+from repro.query.bgp import is_var
+
+
+def _sensor(n=400, seed=3, metadata=True):
+    return generate(SensorGraphSpec(n_observations=n, seed=seed,
+                                    include_sensor_metadata=metadata))
+
+
+def _engine(store):
+    comp = Compactor()
+    comp.run(store)
+    return QueryEngine(comp.fgraph)
+
+
+@pytest.fixture(scope="module")
+def sensor_engine():
+    eng = _engine(_sensor())
+    return eng, eng.fgraph.expand()
+
+
+def _ids(eng, *terms):
+    d = eng.fgraph.store.dict
+    return tuple(d.lookup(t) for t in terms)
+
+
+# ---------------------------------------------------------------------------
+# algebra
+# ---------------------------------------------------------------------------
+
+def test_star_pattern_requires_var_subject():
+    with pytest.raises(ValueError, match="subject"):
+        StarPattern("obs/0", ((1, 2),))
+
+
+def test_filter_validation():
+    with pytest.raises(ValueError, match="op"):
+        Filter("?v", "~", 3)
+    with pytest.raises(ValueError, match="var"):
+        Filter("v", "==", 3)
+
+
+def test_bgp_validation():
+    s = StarPattern("?s", ((1, "?v"),))
+    with pytest.raises(ValueError, match="at least one star"):
+        BGPQuery(stars=())
+    with pytest.raises(ValueError, match="unbound"):
+        BGPQuery(stars=(s,), filters=(Filter("?w", "==", 0),))
+    q = BGPQuery(stars=(s, StarPattern("?v", ((2, "?w"),))))
+    assert q.variables == ("?s", "?v", "?w")
+
+
+def test_filter_apply_vectorized():
+    col = np.array([1, 5, 5, 9])
+    assert Filter("?v", "==", 5).apply(col).tolist() == \
+        [False, True, True, False]
+    assert Filter("?v", "<", 5).apply(col).tolist() == \
+        [True, False, False, False]
+    assert Filter("?v", ">=", 5).apply(col).tolist() == \
+        [False, True, True, True]
+
+
+# ---------------------------------------------------------------------------
+# joins: molecule granularity + parity on the sensor schema
+# ---------------------------------------------------------------------------
+
+def test_two_star_join_is_molecule_to_molecule(sensor_engine):
+    """The obs-sensor join over ``procedure`` runs AMI x AMI: the
+    factorized intermediate is bounded by molecule counts, the raw one
+    by entity counts."""
+    eng, exp = sensor_engine
+    obs, sen, p_proc, p_model, m0 = _ids(
+        eng, OBSERVATION, SENSOR, P_PROCEDURE, P_MODEL, "model/1")
+    q = BGPQuery(stars=(
+        StarPattern("?o", ((p_proc, "?s"),), class_id=obs),
+        StarPattern("?s", ((p_model, m0),), class_id=sen)))
+    ref = eval_bgp_reference(exp, q)
+    assert ref.n_rows > 0
+    got_f, st_f = eng.query_bgp(q, strategy="factorized",
+                                return_stats=True)
+    got_r, st_r = eng.query_bgp(q, strategy="raw", return_stats=True)
+    assert got_f.same_as(ref) and got_r.same_as(ref)
+    assert st_f["deferred_stars"] == 2
+    # AMI x AMI vs AM x AM: molecule frontier strictly below entity
+    # frontier (20 obs molecules vs 400 observations on this spec)
+    assert st_f["max_intermediate"] < st_r["max_intermediate"]
+    ami = eng.fgraph.ami(obs) + eng.fgraph.ami(sen)
+    assert st_f["max_intermediate"] <= ami
+
+
+def test_three_star_chain_parity(sensor_engine):
+    eng, exp = sensor_engine
+    obs, sen, meas, p_proc, p_res, p_model, p_val, m0 = _ids(
+        eng, OBSERVATION, SENSOR, MEASUREMENT, P_PROCEDURE, P_RESULT,
+        P_MODEL, P_VALUE, "model/0")
+    q = BGPQuery(stars=(
+        StarPattern("?o", ((p_proc, "?s"), (p_res, "?m")), class_id=obs),
+        StarPattern("?s", ((p_model, m0),), class_id=sen),
+        StarPattern("?m", ((p_val, "?v"),), class_id=meas)))
+    ref = eval_bgp_reference(exp, q)
+    assert ref.n_rows > 0
+    for strat in ("auto", "raw", "factorized"):
+        got = eng.query_bgp(q, strategy=strat)
+        assert got.same_as(ref), strat
+
+
+def test_repeated_var_within_star(sensor_engine):
+    """procedure/generatedBy share the sensor object, so binding both
+    arms to ONE variable must keep every row (and a fresh variable pair
+    must agree with the reference too)."""
+    eng, exp = sensor_engine
+    obs, p_proc, p_gen = _ids(eng, OBSERVATION, P_PROCEDURE,
+                              "ssn:generatedBy")
+    q = BGPQuery(stars=(StarPattern(
+        "?o", ((p_proc, "?s"), (p_gen, "?s")), class_id=obs),))
+    ref = eval_bgp_reference(exp, q)
+    assert ref.n_rows > 0
+    for strat in ("auto", "raw", "factorized"):
+        assert eng.query_bgp(q, strategy=strat).same_as(ref), strat
+
+
+# ---------------------------------------------------------------------------
+# filter pushdown
+# ---------------------------------------------------------------------------
+
+def test_filter_pushdown_shrinks_molecule_frontier(sensor_engine):
+    """A pushed-down value filter evaluates ONCE per molecule and prunes
+    the frontier BEFORE emission; post-hoc filtering carries the full
+    frontier through the join."""
+    eng, exp = sensor_engine
+    meas, p_val, v2 = _ids(eng, MEASUREMENT, P_VALUE, "val/2")
+    q = BGPQuery(
+        stars=(StarPattern("?m", ((p_val, "?v"),), class_id=meas),),
+        filters=(Filter("?v", "<", v2),))
+    ref = eval_bgp_reference(exp, q)
+    assert ref.n_rows > 0
+    pushed, st_p = eng.query_bgp(q, strategy="factorized",
+                                 return_stats=True)
+    posthoc, st_h = eng.query_bgp(q, strategy="factorized",
+                                  posthoc_filters=True, return_stats=True)
+    assert pushed.same_as(ref) and posthoc.same_as(ref)
+    assert st_p["filters_pushed"] > 0 and st_h["filters_pushed"] == 0
+    assert st_p["max_intermediate"] < st_h["max_intermediate"]
+
+
+def test_filter_ops_parity(sensor_engine):
+    eng, exp = sensor_engine
+    meas, p_val, v = _ids(eng, MEASUREMENT, P_VALUE, "val/1")
+    for op in ("==", "!=", "<", "<=", ">", ">="):
+        q = BGPQuery(
+            stars=(StarPattern("?m", ((p_val, "?v"),), class_id=meas),),
+            filters=(Filter("?v", op, v),))
+        ref = eval_bgp_reference(exp, q)
+        for strat in ("auto", "raw", "factorized"):
+            assert eng.query_bgp(q, strategy=strat).same_as(ref), (op,
+                                                                   strat)
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def test_planner_prefers_factorized_for_insp_ground(sensor_engine):
+    """In-SP ground lookup: one sorted-row probe on the molecule table
+    beats scanning the raw class population."""
+    eng, _ = sensor_engine
+    meas = _ids(eng, MEASUREMENT)[0]
+    t = eng.fgraph.tables[meas]
+    arms = tuple((int(p), int(o)) for p, o in zip(t.props, t.objects[0]))
+    q = BGPQuery(stars=(StarPattern("?m", arms, class_id=meas),))
+    plan = plan_bgp(eng.fgraph, q)
+    assert plan.stars[0].strategy == "factorized"
+    assert plan.stars[0].deferred
+
+
+def test_planner_prefers_raw_for_offsp_var_arm(sensor_engine):
+    """observationResult is residual (off every Observation SP), so a
+    var arm over it must pay per-pair residual probes under the
+    factorized strategy -- raw wins."""
+    eng, _ = sensor_engine
+    obs, p_res = _ids(eng, OBSERVATION, P_RESULT)
+    q = BGPQuery(stars=(StarPattern("?o", ((p_res, "?m"),),
+                                    class_id=obs),))
+    plan = plan_bgp(eng.fgraph, q)
+    assert plan.stars[0].strategy == "raw"
+
+
+def test_planner_join_order_smallest_frontier_first(sensor_engine):
+    """The ground-constrained sensor star (12 molecules) enters the join
+    before the unconstrained observation star."""
+    eng, _ = sensor_engine
+    obs, sen, p_proc, p_model, m0 = _ids(
+        eng, OBSERVATION, SENSOR, P_PROCEDURE, P_MODEL, "model/1")
+    q = BGPQuery(stars=(
+        StarPattern("?o", ((p_proc, "?s"),), class_id=obs),
+        StarPattern("?s", ((p_model, m0),), class_id=sen)))
+    plan = plan_bgp(eng.fgraph, q)
+    assert plan.order[0] == 1      # the sensor star leads
+    assert plan.stars[1].est_frontier <= plan.stars[0].est_frontier
+
+
+def test_planner_strategy_override(sensor_engine):
+    eng, _ = sensor_engine
+    meas, p_val = _ids(eng, MEASUREMENT, P_VALUE)
+    q = BGPQuery(stars=(StarPattern("?m", ((p_val, "?v"),),
+                                    class_id=meas),))
+    assert set(plan_bgp(eng.fgraph, q, strategy="raw").strategies) \
+        == {"raw"}
+    assert set(plan_bgp(eng.fgraph, q,
+                        strategy="factorized").strategies) \
+        == {"factorized"}
+    with pytest.raises(ValueError, match="strategy"):
+        plan_bgp(eng.fgraph, q, strategy="molecular")
+
+
+def test_fgraph_accessors(sensor_engine):
+    eng, _ = sensor_engine
+    fg = eng.fgraph
+    meas = _ids(eng, MEASUREMENT)[0]
+    t = fg.tables[meas]
+    assert fg.ami(meas) == t.n_molecules
+    assert fg.am(meas) == int(fg.support(meas).sum())
+    ents, _ = fg.members_of(int(t.surrogates[0]))
+    got = fg.molecule_of(meas, ents)
+    assert (got == t.surrogates[0]).all()
+    assert fg.molecule_of(meas, np.array([10**6]))[0] == -1
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random multi-star BGPs x random graphs x random deletes
+# ---------------------------------------------------------------------------
+
+def _random_graph(rng, n_ent, n_props, n_obj, n_cls):
+    triples = []
+    for i in range(n_ent):
+        e = f"e{i}"
+        for c in range(n_cls):
+            if c == 0 or rng.random() < 0.4:
+                triples.append((e, "rdf:type", f"C{c}"))
+        for p in range(n_props):
+            if rng.random() < 0.85:
+                triples.append((e, f"p{p}", f"o{rng.integers(0, n_obj)}"))
+    return TripleStore.from_triples(triples)
+
+
+def _random_bgp(rng, store, n_props, n_obj, n_cls):
+    """1-3 stars chained by shared variables (star i links to star i+1's
+    subject through a var arm), random ground/var objects, random class
+    constraints, random filters over any bound variable."""
+    n_stars = int(rng.integers(1, 4))
+    stars = []
+    for i in range(n_stars):
+        arms = []
+        n_arms = int(rng.integers(1, min(n_props, 3) + 1))
+        for k, p in enumerate(rng.choice(n_props, size=n_arms,
+                                         replace=False)):
+            pid = store.dict.lookup(f"p{p}")
+            if pid is None:
+                continue
+            r = rng.random()
+            if r < 0.35:
+                arms.append((pid, f"?v{i}_{k}"))
+            else:
+                o = store.dict.lookup(f"o{rng.integers(0, n_obj + 1)}")
+                if o is None:
+                    continue
+                arms.append((pid, o))
+        if i + 1 < n_stars:        # chain: this star joins the next
+            pid = store.dict.lookup(f"p{rng.integers(0, n_props)}")
+            if pid is not None:
+                arms.append((pid, f"?s{i + 1}"))
+        if not arms:
+            return None
+        cid = None
+        if rng.random() < 0.7:
+            cid = store.dict.lookup(f"C{rng.integers(0, n_cls)}")
+        stars.append(StarPattern(f"?s{i}", tuple(arms), class_id=cid))
+    q = BGPQuery(stars=tuple(stars))
+    filters = []
+    for v in q.variables:
+        if rng.random() < 0.3:
+            val = store.dict.lookup(f"o{rng.integers(0, n_obj)}")
+            if val is not None:
+                op = ("==", "!=", "<", "<=", ">", ">=")[
+                    int(rng.integers(0, 6))]
+                filters.append(Filter(v, op, val))
+    return BGPQuery(stars=tuple(stars), filters=tuple(filters))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_ent=st.integers(2, 14), n_props=st.integers(2, 4),
+       n_obj=st.integers(1, 3), n_cls=st.integers(1, 2),
+       seed=st.integers(0, 10_000), with_deletes=st.booleans())
+def test_bgp_strategy_parity_property(n_ent, n_props, n_obj, n_cls, seed,
+                                      with_deletes):
+    """EVERY random multi-star BGP -- planner-chosen, fixed-raw and
+    fixed-factorized, filters pushed AND post-hoc -- answers identically
+    to the reference evaluation on expand(), including post-delete
+    states, incomplete molecules and multi-typed entities."""
+    rng = np.random.default_rng(seed)
+    store = _random_graph(rng, n_ent, n_props, n_obj, n_cls)
+    comp = Compactor(min_predicted_savings=-10**9)
+    comp.run(store)
+    if with_deletes and store.n_triples:
+        k = int(rng.integers(1, min(4, store.n_triples) + 1))
+        rows = store.spo[rng.choice(store.n_triples, size=k,
+                                    replace=False)]
+        comp.delete(triples=rows)
+    eng = QueryEngine(comp.fgraph)
+    expanded = comp.fgraph.expand()
+    for _ in range(4):
+        q = _random_bgp(rng, store, n_props, n_obj, n_cls)
+        if q is None:
+            continue
+        ref = eval_bgp_reference(expanded, q)
+        for strat in ("auto", "raw", "factorized"):
+            for posthoc in (False, True):
+                got = eng.query_bgp(q, strategy=strat,
+                                    posthoc_filters=posthoc)
+                assert got.columns == ref.columns
+                assert got.same_as(ref), (strat, posthoc, q)
+
+
+# ---------------------------------------------------------------------------
+# batched device path
+# ---------------------------------------------------------------------------
+
+def test_bgp_device_path_zero_warm_retraces(sensor_engine):
+    pytest.importorskip("jax")
+    from repro.core import sweep as core_sweep
+    eng, exp = sensor_engine
+    obs, sen, meas, p_proc, p_res, p_model, p_val, m0 = _ids(
+        eng, OBSERVATION, SENSOR, MEASUREMENT, P_PROCEDURE, P_RESULT,
+        P_MODEL, P_VALUE, "model/1")
+    q = BGPQuery(stars=(
+        StarPattern("?o", ((p_proc, "?s"), (p_res, "?m")), class_id=obs),
+        StarPattern("?s", ((p_model, m0),), class_id=sen),
+        StarPattern("?m", ((p_val, "?v"),), class_id=meas)))
+    ref = eval_bgp_reference(exp, q)
+    core_sweep.reset_trace_stats()
+    first = eng.query_bgp(q, strategy="factorized", backend="device")
+    cold = core_sweep.trace_count()
+    again = eng.query_bgp(q, strategy="factorized", backend="device")
+    warm = core_sweep.trace_count()
+    assert first.same_as(ref) and again.same_as(ref)
+    assert warm == cold, f"warm rerun retraced: {cold} -> {warm}"
+
+
+# ---------------------------------------------------------------------------
+# serving endpoint
+# ---------------------------------------------------------------------------
+
+def test_serving_bgp_endpoint():
+    from repro.serving import BGPQueryRequest, GraphQueryService
+    store = _sensor(200, seed=7)
+    comp = Compactor()
+    comp.run(store)
+    svc = GraphQueryService(comp.fgraph)
+    stars = (("?o", ((P_PROCEDURE, "?s"), (P_TIME, "time/3")),
+              OBSERVATION),
+             ("?s", ((P_MODEL, "model/1"),), SENSOR))
+    for rid, strat in enumerate(("auto", "raw", "factorized")):
+        svc.submit(BGPQueryRequest(rid=rid, stars=stars, strategy=strat))
+    svc.submit(BGPQueryRequest(        # unknown term: empty, not an error
+        rid=3, stars=(("?m", ((P_VALUE, "val/nope"),), MEASUREMENT),)))
+    out = svc.run()
+    assert out[0].n_rows > 0
+    assert sorted(out[0].rows) == sorted(out[1].rows) \
+        == sorted(out[2].rows)
+    assert out[0].variables == ("?o", "?s")
+    assert all(s in ("raw", "factorized") for s in out[0].strategies)
+    assert out[3].n_rows == 0 and out[3].rows == []

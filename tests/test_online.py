@@ -5,6 +5,7 @@ incremental == batch digest-parity property over random interleavings
 of update/delete batches."""
 from __future__ import annotations
 
+import dataclasses
 import threading
 
 import numpy as np
@@ -120,6 +121,78 @@ def test_failed_apply_leaves_head_queued_and_old_snapshot_live():
     del svc.planner.apply_update        # restore the real method
     rep = svc.step()
     assert rep is not None and rep.seq == batch.seq
+    assert svc.queue.depth == 0 and svc.snapshot is not snap0
+
+
+# ---------------------------------------------------------------------------
+# ingest coalescing: insert runs merge into one apply
+# ---------------------------------------------------------------------------
+
+def test_queue_peek_coalesced_run_semantics():
+    q = IngestQueue()
+    a = q.append(inserts=np.zeros((1, 3), np.int32))
+    b = q.append(inserts=np.zeros((2, 3), np.int32))
+    c = q.append(inserts=np.zeros((1, 3), np.int32),
+                 delete_entities=np.asarray([7], np.int64))
+    d = q.append(inserts=np.zeros((1, 3), np.int32))
+    run = q.peek_coalesced()
+    # the delete-carrying batch TERMINATES the run (inside a batch
+    # inserts apply before deletes, so it can close but never extend it)
+    assert [x.seq for x in run] == [a.seq, b.seq, c.seq]
+    assert q.depth == 4                      # write-ahead: nothing removed
+    assert [x.seq for x in q.peek_coalesced(max_batches=2)] \
+        == [a.seq, b.seq]
+    q.mark_applied_through([x.seq for x in run])
+    assert q.peek() is d and q.depth == 1
+    with pytest.raises(ValueError):          # strict-head discipline kept
+        q.mark_applied_through([d.seq + 1])
+
+
+def test_coalesced_step_applies_run_in_one_apply():
+    store = generate(SensorGraphSpec(n_observations=60, seed=8))
+    svc = OnlineCompactionService(store, detector="gfsp", backend="host",
+                                  coalesce=True)
+    base = OnlineCompactionService(store, detector="gfsp", backend="host",
+                                   coalesce=False)
+    rng = np.random.default_rng(0)
+    obs = store.dict.lookup("ssn:Observation")
+    ins1, names = _clone_inserts(store, obs, "co1", 2, rng)
+    ins2, _ = _novel_inserts(store, obs, "co2", 2)
+    for s in (svc, base):
+        s.submit(inserts=ins1)
+        s.submit(inserts=ins2)
+        s.submit(delete_entities=[names[0]])
+    rep = svc.step()                         # ONE step: the whole run
+    assert rep is not None and svc.queue.depth == 0
+    assert svc.metrics.channel("ingest.coalesced_batches").last == 3
+    steps = base.drain()                     # the twin pays three
+    assert len(steps) == 3
+    assert base.metrics.channel("ingest.coalesced_batches").max == 1
+    # identical semantic state: coalescing only merges the applies
+    assert np.array_equal(svc.snapshot.fgraph.expand().spo,
+                          base.snapshot.fgraph.expand().spo)
+
+
+def test_failed_coalesced_apply_leaves_whole_run_queued():
+    store, svc = _service(40, seed=2)
+    rng = np.random.default_rng(1)
+    meas = store.dict.lookup("ssn:Measurement")
+    b0 = svc.submit(inserts=_clone_inserts(store, meas, "c0", 1, rng)[0])
+    b1 = svc.submit(inserts=_clone_inserts(store, meas, "c1", 1, rng)[0])
+    snap0 = svc.snapshot
+
+    def boom(snapshot, new_triples):
+        raise RuntimeError("injected apply failure")
+
+    svc.planner.apply_update = boom
+    with pytest.raises(RuntimeError, match="injected"):
+        svc.step()
+    # nothing committed: the identical run reruns on the next step
+    assert svc.snapshot is snap0
+    assert svc.queue.peek() is b0 and svc.queue.depth == 2
+    del svc.planner.apply_update
+    rep = svc.step()
+    assert rep is not None and rep.seq == b1.seq
     assert svc.queue.depth == 0 and svc.snapshot is not snap0
 
 
@@ -301,6 +374,53 @@ def test_drift_tracker_thresholds_and_rebaseline():
     assert tr.dirty_classes(fg) == [obs]            # 2 + 1 crosses it
     tr.note_redetected(fg, [obs])
     assert tr.dirty_classes(fg) == []               # re-baselined
+
+
+def test_drift_backoff_doubles_thresholds_and_resets():
+    store, svc = _service(40, seed=6)
+    fg = svc.snapshot.fgraph
+    obs = store.dict.lookup("ssn:Observation")
+    tr = DriftTracker(raw_residue_threshold=10**6,
+                      support_drift_threshold=2, max_backoff=2)
+    tr.prime(fg)
+
+    class FakeUpdate:
+        touched_classes = (obs,)
+        per_class = {obs: {"new_surrogates": 2}}
+
+    tr.observe_update(FakeUpdate())
+    assert tr.dirty_classes(fg) == [obs]            # 2 >= 2
+    tr.note_redetected(fg, [obs], rejected=True)
+    assert tr.backoff(obs) == 1
+    tr.observe_update(FakeUpdate())
+    assert tr.dirty_classes(fg) == []               # needs 2*2 = 4 now
+    tr.observe_update(FakeUpdate())
+    assert tr.dirty_classes(fg) == [obs]            # 4 >= 4
+    for _ in range(3):                              # capped at max_backoff
+        tr.note_redetected(fg, [obs], rejected=True)
+    assert tr.backoff(obs) == 2
+    tr.note_redetected(fg, [obs])                   # accepted: reset
+    assert tr.backoff(obs) == 0
+
+
+def test_service_feeds_rejection_into_backoff():
+    store, svc = _service(40, seed=9, auto_redetect=False)
+    obs = store.dict.lookup("ssn:Observation")
+    real = svc.planner.redetect
+
+    def rejecting(snapshot, cids):
+        snap, report = real(snapshot, cids)
+        # force the realized-edges guard's verdict: old snapshot kept
+        return snapshot, dataclasses.replace(report, rejected=True)
+
+    svc.planner.redetect = rejecting
+    assert svc.drift.backoff(obs) == 0
+    svc.redetect([obs])
+    svc.redetect([obs])
+    assert svc.drift.backoff(obs) == 2              # two rejected passes
+    svc.planner.redetect = real
+    svc.redetect([obs])
+    assert svc.drift.backoff(obs) == 0              # accepted pass resets
 
 
 # ---------------------------------------------------------------------------
