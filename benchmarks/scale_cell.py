@@ -1,0 +1,220 @@
+"""One (shape x scale x tier) cell of the scale grid, in its OWN process.
+
+``ru_maxrss`` is per-process and monotone -- the only way to attribute a
+peak-RSS number to a cell is to give the cell a fresh process.  The
+parent (``benchmarks.run --scale``) launches this module once per
+(shape, n_triples, tier), reads the JSON document printed on the last
+stdout line, and cross-checks detect/query digests between the two
+tiers of every cell.
+
+What one cell does:
+
+1. generate the workload shape at the target scale (vectorized);
+2. on the compressed tier: re-host the graph on the bit-packed
+   substrate, drop the plain store, and collect -- from here on the
+   uncompressed triple arrays exist only transiently inside decodes;
+3. detect (cold + warm) through the standard ``Compactor`` pipeline --
+   the compressed tier streams classes (``stream=True``) so resident
+   decodes never accumulate past one class's working set;
+4. answer a star-query workload (molecule lookups + var arms) twice,
+   digesting the binding sets;
+5. optionally run the online-soak twin comparison (``--twin N``):
+   N same-shape insert batches through an ``OnlineCompactionService``
+   vs its ``auto_redetect=False`` twin, reporting the final edge
+   advantage of recompaction (ROADMAP item 4 leftover, per cell);
+6. print a one-line JSON report: times, digests, substrate bytes,
+   bytes-per-triple, decode counters, ``ru_maxrss``.
+
+Deterministic substrate accounting (``substrate_nbytes``) carries the
+compression gate; ``ru_maxrss`` is recorded as the honest whole-process
+context (it includes generation, which necessarily materializes
+uncompressed arrays before handing them to the compressor).
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import hashlib
+import json
+import resource
+import sys
+import time
+
+import numpy as np
+
+
+def _rss_kb() -> int:
+    # linux reports ru_maxrss in KiB
+    return int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss)
+
+
+def _build_queries(fg, store, max_lookups: int = 24, max_var: int = 8):
+    """Star workload off the compacted form: all-ground molecule lookups
+    + var-arm scans per factorized class; classes that did not factorize
+    (adversarial shape) get index-derived ground+var probes instead."""
+    from repro.query import StarQuery
+
+    queries = []
+    for cid, t in sorted(fg.tables.items()):
+        for row in t.objects[:max_lookups]:
+            queries.append(StarQuery(
+                arms=tuple((int(p), int(o))
+                           for p, o in zip(t.props, row)),
+                class_id=cid))
+        for row in t.objects[:max_var]:
+            queries.append(StarQuery(
+                arms=((int(t.props[0]), int(row[0])),
+                      (int(t.props[-1]), None)),
+                class_id=cid))
+    if not queries:                      # nothing factorized: raw probes
+        idx = store.index
+        for cid in idx.classes().tolist()[:4]:
+            props = idx.class_properties(cid)
+            if props.shape[0] < 2:
+                continue
+            p0, p1 = int(props[0]), int(props[-1])
+            objs = idx.pred_objects_sorted(p0)
+            for o in objs[:: max(objs.shape[0] // 8, 1)][:8]:
+                queries.append(StarQuery(
+                    arms=((p0, int(o)), (p1, None)), class_id=int(cid)))
+    return queries
+
+
+def _digest(bindings) -> str:
+    h = hashlib.sha1()
+    for b in bindings:
+        h.update(b.canonical().tobytes())
+    return h.hexdigest()[:16]
+
+
+def _twin_soak(snapshot, shape: str, n_batches: int, seed: int) -> dict:
+    """Per-cell no-recompaction-twin comparison: the same same-shape
+    insert stream through a recompacting service and a twin that only
+    applies -- the final G' edge gap is what re-detection bought."""
+    from repro.data.synthetic import WorkloadSpec, generate_workload
+    from repro.online import OnlineCompactionService
+
+    svc = OnlineCompactionService(snapshot, min_predicted_savings=1)
+    twin = OnlineCompactionService(snapshot, auto_redetect=False)
+    for b in range(n_batches):
+        batch = generate_workload(WorkloadSpec(
+            shape=shape, n_triples=2_000, seed=seed + 101 + b))
+        # remap entity terms (subjects, and objects that are themselves
+        # subjects) behind a per-batch prefix: the inserts become NEW
+        # entities of the EXISTING classes/vocabulary instead of
+        # colliding with same-named entities of the base graph
+        subs = set(batch.spo[:, 0].tolist())
+        t = batch.dict.term
+        trips = []
+        for s, p, o in batch.spo[:1_000].tolist():
+            trips.append((f"b{b}/{t(s)}", t(p),
+                          f"b{b}/{t(o)}" if o in subs else t(o)))
+        svc.submit(inserts=trips)
+        twin.submit(inserts=trips)
+    svc.drain()
+    twin.drain()
+    assert svc.snapshot.digest() == twin.snapshot.digest(), \
+        "twin semantic divergence"
+    return {
+        "batches": n_batches,
+        "edges": int(svc.snapshot.n_triples),
+        "edges_twin": int(twin.snapshot.n_triples),
+        "edge_advantage": int(twin.snapshot.n_triples
+                              - svc.snapshot.n_triples),
+        "swaps": svc.swap_count,
+    }
+
+
+def run_cell(shape: str, n_triples: int, tier: str, backend: str,
+             seed: int, twin: int) -> dict:
+    from repro.api import Compactor
+    from repro.core import sweep as core_sweep
+    from repro.core.compress import DECODE_STATS, compress_store
+    from repro.data.synthetic import WorkloadSpec, generate_workload
+    from repro.query import QueryEngine
+
+    t0 = time.perf_counter()
+    store = generate_workload(WorkloadSpec(
+        shape=shape, n_triples=n_triples, seed=seed))
+    gen_ms = (time.perf_counter() - t0) * 1e3
+    n = store.n_triples
+    plain_bytes = store.substrate_nbytes()
+
+    if tier == "compressed":
+        t0 = time.perf_counter()
+        store = compress_store(store)
+        store.release_decoded()
+        compress_ms = (time.perf_counter() - t0) * 1e3
+        gc.collect()
+    else:
+        compress_ms = 0.0
+    sub_bytes = store.substrate_nbytes()
+
+    stream = tier == "compressed"
+    comp = Compactor(detector="gfsp", backend=backend)
+    core_sweep.reset_trace_stats()      # also resets DECODE_STATS
+    t0 = time.perf_counter()
+    comp.run(store, stream=stream)
+    detect_cold_ms = (time.perf_counter() - t0) * 1e3
+    traces_cold = core_sweep.trace_count()
+    decode_peak = int(DECODE_STATS["peak_resident_bytes"])
+    t0 = time.perf_counter()
+    comp.run(store, stream=stream)
+    detect_warm_ms = (time.perf_counter() - t0) * 1e3
+    traces_warm = core_sweep.trace_count() - traces_cold
+    snap = comp.snapshot
+    detect_digest = snap.digest()
+
+    eng = QueryEngine(snap.fgraph)
+    queries = _build_queries(snap.fgraph, store)
+    res = eng.query_batch(queries, strategy="factorized", backend="host")
+    t0 = time.perf_counter()
+    res = eng.query_batch(queries, strategy="factorized", backend="host")
+    query_warm_ms = (time.perf_counter() - t0) * 1e3
+
+    out = {
+        "shape": shape, "tier": tier, "backend": backend, "seed": seed,
+        "n_triples": int(n), "n_terms": len(store.dict),
+        "gen_ms": round(gen_ms, 1), "compress_ms": round(compress_ms, 1),
+        "substrate_bytes": int(sub_bytes),
+        "substrate_bytes_plain": int(plain_bytes),
+        "bytes_per_triple": round(sub_bytes / max(n, 1), 2),
+        "detect_cold_ms": round(detect_cold_ms, 1),
+        "detect_warm_ms": round(detect_warm_ms, 1),
+        "trace_count_cold": int(traces_cold),
+        "trace_count_warm": int(traces_warm),
+        "decode_peak_resident_bytes": decode_peak,
+        "compacted_triples": int(snap.n_triples),
+        "n_classes_planned": len(snap.fgraph.tables),
+        "detect_digest": detect_digest,
+        "n_queries": len(queries),
+        "query_warm_ms": round(query_warm_ms, 2),
+        "query_rows": int(sum(b.n_rows for b in res)),
+        "query_digest": _digest(res),
+    }
+    if twin:
+        out["twin"] = _twin_soak(snap, shape, twin, seed)
+    out["rss_peak_kb"] = _rss_kb()
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--n", type=int, required=True)
+    ap.add_argument("--tier", choices=("plain", "compressed"),
+                    default="plain")
+    ap.add_argument("--backend", default="host")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--twin", type=int, default=0,
+                    help="insert batches for the no-recompaction-twin "
+                         "comparison (0 = skip)")
+    args = ap.parse_args()
+    cell = run_cell(args.shape, args.n, args.tier, args.backend,
+                    args.seed, args.twin)
+    sys.stdout.flush()
+    print(json.dumps(cell))
+
+
+if __name__ == "__main__":
+    main()

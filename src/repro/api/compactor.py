@@ -100,9 +100,12 @@ class Compactor:
         return self.planner.detect(store, class_id, props=props)
 
     def plan(self, store: TripleStore,
-             classes: Iterable[int] | None = None) -> CompactionPlan:
-        """Rank all (or the given) classes by predicted #Edges savings."""
-        return self.planner.plan(store, classes)
+             classes: Iterable[int] | None = None, *,
+             stream: bool = False) -> CompactionPlan:
+        """Rank all (or the given) classes by predicted #Edges savings.
+        ``stream=True`` drops the store's transient decode caches
+        between classes (see :meth:`CompactionPlanner.plan`)."""
+        return self.planner.plan(store, classes, stream=stream)
 
     # -- execution ---------------------------------------------------------
     def execute(self, store: TripleStore,
@@ -117,9 +120,10 @@ class Compactor:
         return report
 
     def run(self, store: TripleStore,
-            classes: Iterable[int] | None = None) -> CompactionReport:
+            classes: Iterable[int] | None = None, *,
+            stream: bool = False) -> CompactionReport:
         """plan + execute in one call (the common entry point)."""
-        return self.execute(store, self.plan(store, classes))
+        return self.execute(store, self.plan(store, classes, stream=stream))
 
     # -- snapshot state ----------------------------------------------------
     @property

@@ -209,6 +209,11 @@ class GraphSnapshot:
 
     fgraph: FactorizedGraph
     epoch: int = 0
+    # one-slot memo for ``digest()`` -- a mutable cell so the frozen
+    # dataclass can fill it lazily; a swap creates a NEW snapshot object,
+    # so invalidation is automatic (never carried across epochs)
+    _digest_cache: list = dataclasses.field(
+        default_factory=list, init=False, repr=False, compare=False)
 
     @property
     def store(self) -> TripleStore:
@@ -229,10 +234,16 @@ class GraphSnapshot:
     def digest(self) -> str:
         """sha1 of the *semantic* graph (``expand()``, canonical row
         order) -- two snapshots with equal digests represent the same RDF
-        graph regardless of how it is factorized."""
-        return hashlib.sha1(
-            np.ascontiguousarray(self.fgraph.expand().spo).tobytes()
-        ).hexdigest()[:16]
+        graph regardless of how it is factorized.  Cached per snapshot:
+        the snapshot is immutable, so the first expansion's hash stays
+        valid for its whole lifetime (the online soak's parity checks
+        call this in a loop; at 1M triples re-expanding would dominate
+        wall clock)."""
+        if not self._digest_cache:
+            self._digest_cache.append(hashlib.sha1(
+                np.ascontiguousarray(self.fgraph.expand().spo).tobytes()
+            ).hexdigest()[:16])
+        return self._digest_cache[0]
 
     def __repr__(self) -> str:  # pragma: no cover
         return (f"GraphSnapshot(epoch={self.epoch}, "
@@ -289,10 +300,20 @@ class CompactionPlanner:
 
     # -- planning ----------------------------------------------------------
     def plan(self, store: TripleStore,
-             classes: Iterable[int] | None = None) -> CompactionPlan:
-        """Rank all (or the given) classes by predicted #Edges savings."""
+             classes: Iterable[int] | None = None, *,
+             stream: bool = False) -> CompactionPlan:
+        """Rank all (or the given) classes by predicted #Edges savings.
+
+        ``stream=True`` releases the store's transient decode caches
+        between classes (compressed tier: resident CSR partitions,
+        per-class entity vectors, sorted-object caches), so detection
+        over an out-of-core-scale graph holds at most one class's
+        working set uncompressed at a time -- peak RSS is bounded by the
+        largest class bucket, not the graph."""
         cids = ([int(c) for c in classes] if classes is not None
                 else [int(c) for c in store.classes()])
+        release = getattr(store, "release_transients", None) \
+            if stream else None
         entries = []
         for cid in cids:
             stats = store.class_stats(cid)
@@ -302,12 +323,16 @@ class CompactionPlanner:
                 continue                      # nothing star-shaped to share
             res = self.detect(store, cid)
             if len(res.props) < 2:
+                if release is not None:
+                    release()
                 continue
             entry = ClassPlan(class_id=cid, props=tuple(sorted(res.props)),
                               predicted_edges=res.edges,
                               baseline_edges=am * n_s, detection=res)
             if entry.predicted_savings >= self.min_predicted_savings:
                 entries.append(entry)
+            if release is not None:
+                release()
         entries.sort(key=lambda e: -e.predicted_savings)
         return CompactionPlan(entries=entries, detector=self.detector.name,
                               backend=self.backend.name)

@@ -372,10 +372,10 @@ class FactorizedGraph:
         idx = self.store.index
         sp = set(t.props)
         out = []
-        for i, p in enumerate(idx.preds.tolist()):
+        for p in idx.preds.tolist():
             if p in sp or p == idx.type_id or p == idx.instance_of_id:
                 continue
-            subs = idx.rows[idx.starts[i]:idx.starts[i + 1], 0]
+            subs = idx.pred_subjects(p)
             if ents.shape[0] and in_sorted(subs, ents).any():
                 out.append(p)
         return np.asarray(out, np.int64)

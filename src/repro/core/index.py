@@ -154,6 +154,20 @@ class GraphIndex:
             return self.rows[:0]
         return self.rows[self.starts[i]:self.starts[i + 1]]
 
+    def pred_subjects(self, p: int) -> np.ndarray:
+        """Subject column of one predicate's partition (non-decreasing).
+        The accessor the compressed tier can answer by decoding ONE
+        delta-packed column -- callers must prefer it over slicing
+        ``rows`` directly."""
+        return self.pred_slice(p)[:, 0]
+
+    # -- storage accounting ------------------------------------------------
+    def nbytes(self) -> int:
+        """Resident bytes of the index arrays (the uncompressed-tier
+        denominator of the bytes-per-triple bench column)."""
+        return int(self.rows.nbytes) + int(self.preds.nbytes) \
+            + int(self.starts.nbytes)
+
     # -- selectivity -------------------------------------------------------
     def pred_count(self, p: int) -> int:
         """Row count of a predicate's vertical partition: the size of

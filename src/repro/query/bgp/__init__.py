@@ -9,21 +9,27 @@ Layers (ROADMAP item 1):
   columns, AMI x AMI cross-star joins, vectorized filter pushdown into
   molecule object columns, member materialization last.
 * :mod:`planner`   -- the cost model replacing the caller ``strategy=``
-  flag: per-star raw-vs-factorized choice and greedy connected join
-  ordering from AM/AMI ratios and arm/filter selectivities.
+  flag: per-star raw-vs-factorized choice (``CostModel`` constants,
+  mixed-slot join re-pricing) and greedy connected join ordering from
+  AM/AMI ratios and arm/filter selectivities.
+* :mod:`calibrate` -- least-squares fit of the ``CostModel`` constants
+  from timed workloads (the committed defaults come from the BENCH
+  harness running this).
 * :mod:`reference` -- the independent semantics oracle used by the
   property tests.
 
 Entry point for callers: ``repro.query.QueryEngine.query_bgp``.
 """
 from .algebra import BGPBindings, BGPQuery, Filter, StarPattern, is_var
+from .calibrate import calibration_report, fit_cost_model
 from .exec import deferral_eligible, execute_bgp
-from .planner import BGPPlan, StarPlan, plan_bgp
+from .planner import BGPPlan, CostModel, StarPlan, plan_bgp
 from .reference import eval_bgp_reference
 
 __all__ = [
     "BGPBindings", "BGPQuery", "Filter", "StarPattern", "is_var",
     "deferral_eligible", "execute_bgp",
-    "BGPPlan", "StarPlan", "plan_bgp",
+    "BGPPlan", "CostModel", "StarPlan", "plan_bgp",
+    "calibration_report", "fit_cost_model",
     "eval_bgp_reference",
 ]

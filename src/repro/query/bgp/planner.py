@@ -34,15 +34,48 @@ from repro.core.fgraph import FactorizedGraph
 from .algebra import BGPQuery, Filter, StarPattern
 from .exec import deferral_eligible
 
-# calibrated against the BENCH single-star matrix (see benchmarks/run.py
-# bgp_matrix): the anchors are "factorized wins in-SP ground lookups"
-# and "raw wins off-SP variable arms"
-C_MOL = 1.0         # per molecule row compared (vectorized ==)
-C_RESIDUAL = 3.0    # per raw-typed entity walked by the residual path
-C_EMIT = 1.5        # per emitted entity binding row
-C_SCAN = 1.0        # per triple scanned in a predicate slice (raw arms)
-C_PAIR = 8.0        # per pair through the factorized off-SP expansion
-                    #   (carries the O(n log n) dedup sort of _arm_pairs)
+@dataclasses.dataclass
+class CostModel:
+    """Per-operation constants of the planner's cost formulas.
+
+    The defaults are a prior-centered least-squares fit against
+    observed warm latencies of the BENCH bgp workloads
+    (``repro.query.bgp.calibrate.fit_cost_model``, ``l2=0.5``, prior =
+    the original hand-tuned anchors "factorized wins in-SP ground
+    lookups" / "raw wins off-SP variable arms"), normalized so
+    ``c_mol == 1``.  ``c_mix`` prices the granularity crossing when a
+    deferred (molecule-level) relation joins an entity-level one --
+    each surviving molecule row pays a membership expansion at join
+    time, which the pre-fit model did not charge for at all (the ~25%
+    planner miss on filtered 3-star chains, ROADMAP item 1').
+    """
+    c_mol: float = 1.0       # per molecule row compared (vectorized ==)
+    c_residual: float = 0.52  # per raw-typed entity on the residual
+                              #   path (prior-pinned: the bench graph
+                              #   factorizes fully, so no data here)
+    c_emit: float = 0.57     # per emitted entity binding row
+    c_scan: float = 0.28     # per triple scanned in a predicate slice
+    c_pair: float = 1.37     # per pair through the factorized off-SP
+                             #   expansion (dedup sort of _arm_pairs)
+    c_mix: float = 5.6       # per deferred molecule row crossing into
+                             #   an entity-granularity join
+
+    FEATURES = ("mol", "residual", "emit", "scan", "pair", "mix")
+
+    def as_array(self) -> np.ndarray:
+        return np.array([self.c_mol, self.c_residual, self.c_emit,
+                         self.c_scan, self.c_pair, self.c_mix])
+
+    @classmethod
+    def from_array(cls, a) -> "CostModel":
+        return cls(*(float(x) for x in a))
+
+
+#: module-level model consulted by :func:`plan_star` /
+#: :func:`plan_bgp` when the caller does not pass one explicitly;
+#: mutate or replace (``planner.COST = fitted``) to recalibrate a
+#: whole process.
+COST = CostModel()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,21 +167,31 @@ def _star_estimates(fg: FactorizedGraph, star: StarPattern,
 
 
 def plan_star(fg: FactorizedGraph, query: BGPQuery, si: int,
-              strategy: str = "auto", cache: dict | None = None
-              ) -> StarPlan:
+              strategy: str = "auto", cache: dict | None = None,
+              cost_model: CostModel | None = None,
+              mixed_partners: int = 0) -> StarPlan:
+    """Cost one star.  ``mixed_partners`` is the number of already-
+    planned non-deferred stars this star shares a variable with; each
+    charges ``c_mix`` per surviving molecule row on the deferred
+    option (the granularity-crossing expansion the join must pay)."""
+    cm = cost_model if cost_model is not None else COST
     star = query.stars[si]
     filters = [f for f in query.filters if f.var in star.variables]
     est = _star_estimates(fg, star, filters, cache)
     eligible = deferral_eligible(fg, star, filters, cache=cache)
 
-    cost_deferred = (C_MOL * est["ami"] + C_RESIDUAL * est["raw_pop"]
-                     + C_EMIT * est["mol_rows"]) if eligible else np.inf
-    cost_fact = (C_MOL * est["ami"] + C_RESIDUAL * est["raw_pop"]
-                 + C_EMIT * est["est_rows"] + C_PAIR * est["off_sp_pairs"])
-    cost_raw = C_SCAN * (est["n_sem"] + est["scan"]
-                         + sum(fg.store.index.pred_count(p)
-                               for p, _ in star.var_arms)) \
-        + C_EMIT * est["est_rows"]
+    cost_deferred = (cm.c_mol * est["ami"]
+                     + cm.c_residual * est["raw_pop"]
+                     + cm.c_emit * est["mol_rows"]
+                     + cm.c_mix * mixed_partners * est["mol_rows"]
+                     ) if eligible else np.inf
+    cost_fact = (cm.c_mol * est["ami"] + cm.c_residual * est["raw_pop"]
+                 + cm.c_emit * est["est_rows"]
+                 + cm.c_pair * est["off_sp_pairs"])
+    cost_raw = cm.c_scan * (est["n_sem"] + est["scan"]
+                            + sum(fg.store.index.pred_count(p)
+                                  for p, _ in star.var_arms)) \
+        + cm.c_emit * est["est_rows"]
 
     if strategy == "raw":
         choice, deferred, cost = "raw", False, cost_raw
@@ -187,12 +230,43 @@ def _join_order(query: BGPQuery, plans: list[StarPlan]) -> tuple[int, ...]:
 
 
 def plan_bgp(fg: FactorizedGraph, query: BGPQuery, *,
-             strategy: str = "auto", cache: dict | None = None) -> BGPPlan:
+             strategy: str = "auto", cache: dict | None = None,
+             cost_model: CostModel | None = None) -> BGPPlan:
     """Plan a BGP.  ``strategy`` is the caller override: ``"auto"`` runs
     the cost model per star, ``"raw"``/``"factorized"`` pin every star
-    (deferral still applies under ``"factorized"`` when sound)."""
+    (deferral still applies under ``"factorized"`` when sound).
+
+    Under ``"auto"`` a second pass re-prices deferred stars that share
+    a variable with a non-deferred partner: the first pass costs each
+    star in isolation, but a molecule-granularity relation joined
+    against an entity-granularity one pays a membership expansion per
+    molecule row (``CostModel.c_mix``).  Re-pricing may flip such stars
+    to entity granularity; each flip can expose new mixed edges, so the
+    pass iterates to a fixpoint (deferrals only ever decrease, so at
+    most ``len(stars)`` rounds)."""
     if strategy not in ("auto", "raw", "factorized"):
         raise ValueError(f"unknown BGP strategy {strategy!r}")
-    plans = [plan_star(fg, query, i, strategy=strategy, cache=cache)
+    cm = cost_model if cost_model is not None else COST
+    plans = [plan_star(fg, query, i, strategy=strategy, cache=cache,
+                       cost_model=cm)
              for i in range(len(query.stars))]
+    if strategy == "auto" and len(plans) > 1:
+        var_sets = [set(s.variables) for s in query.stars]
+        for _ in range(len(plans)):
+            flipped = False
+            for i, sp in enumerate(plans):
+                if not sp.deferred:
+                    continue
+                mixed = sum(1 for j, other in enumerate(plans)
+                            if j != i and not other.deferred
+                            and var_sets[i] & var_sets[j])
+                if not mixed:
+                    continue
+                repl = plan_star(fg, query, i, strategy="auto",
+                                 cache=cache, cost_model=cm,
+                                 mixed_partners=mixed)
+                flipped |= repl.deferred != sp.deferred
+                plans[i] = repl
+            if not flipped:
+                break
     return BGPPlan(order=_join_order(query, plans), stars=tuple(plans))

@@ -386,3 +386,128 @@ def test_serving_bgp_endpoint():
     assert out[0].variables == ("?o", "?s")
     assert all(s in ("raw", "factorized") for s in out[0].strategies)
     assert out[3].n_rows == 0 and out[3].rows == []
+
+
+# ---------------------------------------------------------------------------
+# cost model: mixed-slot re-pricing + calibration
+# ---------------------------------------------------------------------------
+
+def _chain_query(eng):
+    obs, meas, sen = _ids(eng, OBSERVATION, MEASUREMENT, SENSOR)
+    p_proc, p_res, p_model, p_val = _ids(
+        eng, P_PROCEDURE, P_RESULT, P_MODEL, P_VALUE)
+    d = eng.fgraph.store.dict
+    return BGPQuery(stars=(
+        StarPattern("?o", ((p_proc, "?s"), (p_res, "?m")), class_id=obs),
+        StarPattern("?s", ((p_model, d.lookup("model/1")),),
+                    class_id=sen),
+        StarPattern("?m", ((p_val, "?v"),), class_id=meas)))
+
+
+def test_mixed_slot_repricing_flips_and_preserves_semantics(sensor_engine):
+    """With an unbounded granularity-crossing price no deferred star may
+    keep a non-deferred join partner after the fixpoint pass; with the
+    price at zero the second pass is a no-op; every variant returns the
+    same bindings (planning changes cost, never semantics)."""
+    from repro.query.bgp import CostModel, execute_bgp
+    from repro.query.bgp.planner import CostModel as CM
+    eng, _ = sensor_engine
+    fg = eng.fgraph
+    q = _chain_query(eng)
+
+    free = plan_bgp(fg, q, cost_model=CostModel(c_mix=0.0))
+    priced = plan_bgp(fg, q, cost_model=CostModel(c_mix=1e9))
+    var_sets = [set(s.variables) for s in q.stars]
+    for i, sp in enumerate(priced.stars):
+        if sp.deferred:
+            assert not any(var_sets[i] & var_sets[j]
+                           for j, o in enumerate(priced.stars)
+                           if j != i and not o.deferred), \
+                "mixed edge survived an infinite c_mix"
+    ref, _ = execute_bgp(fg, q, plan_bgp(fg, q, strategy="raw"),
+                         raw_store=eng.raw_store)
+    for plan in (free, priced, plan_bgp(fg, q)):
+        got, _ = execute_bgp(fg, q, plan, raw_store=eng.raw_store)
+        assert got.same_as(ref)
+
+
+def test_mixed_partner_count_raises_deferred_cost(sensor_engine):
+    from repro.query.bgp.planner import plan_star
+    eng, _ = sensor_engine
+    fg = eng.fgraph
+    q = _chain_query(eng)
+    for si in range(len(q.stars)):
+        base = plan_star(fg, q, si, strategy="factorized")
+        if not base.deferred:
+            continue
+        c0 = plan_star(fg, q, si, mixed_partners=0)
+        c2 = plan_star(fg, q, si, mixed_partners=2)
+        assert c2.cost >= c0.cost
+
+
+def test_single_star_plan_cost_matches_features(sensor_engine):
+    """planner cost and calibrate features are the same linear form:
+    cost(plan) == COST . features(mode) for an isolated star."""
+    from repro.query.bgp import calibrate as cal
+    from repro.query.bgp.planner import COST, plan_star
+    eng, _ = sensor_engine
+    fg = eng.fgraph
+    obs, = _ids(eng, OBSERVATION)
+    p_proc, = _ids(eng, P_PROCEDURE)
+    q = BGPQuery(stars=(StarPattern("?o", ((p_proc, "?s"),),
+                                    class_id=obs),))
+    for strategy, mode in (("raw", "raw"), ("factorized", None)):
+        sp = plan_star(fg, q, 0, strategy=strategy)
+        m = mode or ("deferred" if sp.deferred else "factorized")
+        feats = cal.star_features(fg, q, 0, m)
+        assert sp.cost == pytest.approx(
+            float(COST.as_array() @ feats), rel=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_fit_cost_model_recovers_planted_constants(seed):
+    """y = A @ c_true with a well-conditioned A and a weak prior: the
+    ridge fit must recover c_true up to the c_mol normalization."""
+    from repro.query.bgp import CostModel, fit_cost_model
+    rng = np.random.default_rng(seed)
+    c_true = rng.uniform(0.5, 8.0, size=6)
+    A = rng.uniform(0.0, 1000.0, size=(40, 6))
+    samples = [(A[i], float(A[i] @ c_true)) for i in range(len(A))]
+    fitted = fit_cost_model(samples, prior=CostModel(), l2=1e-9)
+    np.testing.assert_allclose(fitted.as_array(),
+                               c_true / c_true[0], rtol=1e-3)
+
+
+def test_fit_cost_model_pins_unidentified_features_to_prior():
+    """A feature no sample exercises must come back at (the normalized)
+    prior, not at an arbitrary least-norm value."""
+    from repro.query.bgp import CostModel, fit_cost_model
+    rng = np.random.default_rng(0)
+    c_true = np.array([2.0, 4.0, 1.0, 0.5, 3.0, 6.0])
+    A = rng.uniform(0.0, 1000.0, size=(40, 6))
+    A[:, 5] = 0.0                       # mix never exercised
+    samples = [(A[i], float(A[i] @ c_true)) for i in range(len(A))]
+    prior = CostModel()
+    fitted = fit_cost_model(samples, prior=prior, l2=1e-6)
+    # identified columns recovered; the dead column stays a positive
+    # prior-derived cost instead of collapsing to a least-norm zero
+    np.testing.assert_allclose(fitted.as_array()[:5],
+                               c_true[:5] / c_true[0], rtol=1e-3)
+    assert fitted.c_mix > 0
+
+
+def test_calibration_report_shape(sensor_engine):
+    from repro.query.bgp import calibration_report
+    eng, _ = sensor_engine
+    obs, = _ids(eng, OBSERVATION)
+    p_proc, p_time = _ids(eng, P_PROCEDURE, P_TIME)
+    d = eng.fgraph.store.dict
+    w = {"probe": [BGPQuery(stars=(StarPattern(
+        "?o", ((p_proc, "?s"), (p_time, d.lookup("time/3"))),
+        class_id=obs),))]}
+    rep = calibration_report(eng, w)
+    assert rep["n_samples"] == 2        # raw + factorized
+    assert set(rep["fitted"]) == set(rep["committed"]) \
+        == {"mol", "residual", "emit", "scan", "pair", "mix"}
+    assert rep["rel_l1_error"] >= 0.0

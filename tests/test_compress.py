@@ -1,0 +1,263 @@
+"""The compressed substrate: encoding round-trips, tier equivalence,
+streamed detection, the workload-generator family, and the snapshot
+digest memo.
+
+The load-bearing claim of the compressed tier is *transparency*: every
+accessor of ``GraphIndex``/``TripleStore`` answers byte-identically
+from the bit-packed form, so the sweep and query engines run unchanged
+on either tier.  The property tests here pin the encodings themselves
+(pack/slice/take, delta blocks, front-coded terms); the parity tests
+pin the accessor surface and the end-to-end detect/query digests.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import Compactor
+from repro.core.compress import (DECODE_STATS, CompactTermDict,
+                                 DeltaPacked, FrontCodedTerms,
+                                 PackedInts, bit_width, compress_store)
+from repro.core.triples import TermDict, TripleStore
+from repro.data.synthetic import (WORKLOAD_SHAPES, WorkloadSpec,
+                                  generate_workload)
+from repro.query import QueryEngine, StarQuery
+
+
+# -- bit-packed columns -------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 999), bits=st.integers(1, 40),
+       n=st.integers(0, 600))
+def test_packed_ints_roundtrip(seed, bits, n):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 2 ** bits, size=n, dtype=np.int64)
+    packed = PackedInts.pack(vals)
+    assert len(packed) == n
+    np.testing.assert_array_equal(packed.slice_(), vals)
+    if n:
+        lo = int(rng.integers(0, n))
+        hi = int(rng.integers(lo, n)) + 1
+        np.testing.assert_array_equal(packed.slice_(lo, hi), vals[lo:hi])
+        idx = rng.integers(0, n, size=min(n, 64))
+        np.testing.assert_array_equal(packed.take(idx), vals[idx])
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 999), n=st.integers(0, 900),
+       block=st.sampled_from((8, 64, 1024)))
+def test_delta_packed_roundtrip(seed, n, block):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 1 << 33, size=n, dtype=np.int64)
+    vals.sort()                       # the CSR subject columns are sorted
+    packed = DeltaPacked.pack(vals, block=block)
+    assert len(packed) == n
+    np.testing.assert_array_equal(packed.slice_(), vals)
+    if n:
+        lo = int(rng.integers(0, n))
+        hi = int(rng.integers(lo, n)) + 1
+        np.testing.assert_array_equal(packed.slice_(lo, hi), vals[lo:hi])
+
+
+def test_delta_packed_rejects_unsorted():
+    with pytest.raises(ValueError):
+        DeltaPacked.pack(np.array([3, 1, 2], dtype=np.int64))
+
+
+def test_bit_width_boundaries():
+    assert bit_width(0) == 1
+    assert bit_width(1) == 1
+    assert bit_width(2) == 2
+    assert bit_width(255) == 8
+    assert bit_width(256) == 9
+
+
+# -- front-coded dictionary ---------------------------------------------------
+
+def _random_terms(rng, n):
+    """ASCII-heavy with multi-byte tails: the find() path compares raw
+    UTF-8 bytes, and 'é'/CJK sort differently as str vs bytes, which
+    is exactly the bug class this guards."""
+    pools = ("obs/", "sensor/", "val:", "", "é/", "時/")
+    return sorted({pools[rng.integers(0, len(pools))]
+                   + format(int(rng.integers(0, 10 ** 6)), "x")
+                   for _ in range(n)})
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 999), n=st.integers(1, 300),
+       bucket=st.sampled_from((1, 4, 16)))
+def test_front_coded_terms_roundtrip(seed, n, bucket):
+    rng = np.random.default_rng(seed)
+    terms = sorted(_random_terms(rng, n), key=lambda t: t.encode("utf-8"))
+    fc = FrontCodedTerms.encode(terms, bucket=bucket)
+    assert len(fc) == len(terms)
+    for i, t in enumerate(terms):
+        assert fc.get(i) == t
+        assert fc.find(t) == i
+    assert fc.find("zzz/definitely-not-present") is None
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999), n=st.integers(1, 200))
+def test_compact_term_dict_parity_and_growth(seed, n):
+    rng = np.random.default_rng(seed)
+    d = TermDict()
+    terms = list(_random_terms(rng, n))
+    rng.shuffle(terms)                # insertion order != sorted order
+    for t in terms:
+        d.id(t)
+    cd = CompactTermDict.from_dict(d)
+    assert len(cd) == len(d)
+    for t in terms:
+        assert cd.lookup(t) == d.lookup(t)
+        assert cd.term(d.lookup(t)) == t
+        assert t in cd
+    assert cd.lookup("zzz/not-here") is None
+    # growth past the compacted base stays mutable
+    new_id = cd.id("grown/after-compaction")
+    assert new_id == len(d)
+    assert cd.term(new_id) == "grown/after-compaction"
+    assert cd.nbytes() < d.nbytes()
+
+
+# -- tier equivalence on the accessor surface ---------------------------------
+
+@pytest.fixture(scope="module", params=["sensor", "skewed", "reified"])
+def tier_pair(request):
+    store = generate_workload(WorkloadSpec(
+        shape=request.param, n_triples=2_500, seed=11))
+    return request.param, store, compress_store(store, max_resident=2)
+
+
+def test_index_accessor_parity(tier_pair):
+    _, plain, comp = tier_pair
+    pi, ci = plain.index, comp.index
+    np.testing.assert_array_equal(pi.preds, ci.preds)
+    np.testing.assert_array_equal(pi.classes(), ci.classes())
+    for p in pi.preds.tolist():
+        np.testing.assert_array_equal(pi.pred_slice(p), ci.pred_slice(p))
+        np.testing.assert_array_equal(pi.pred_subjects(p),
+                                      ci.pred_subjects(p))
+        np.testing.assert_array_equal(pi.pred_objects_sorted(p),
+                                      ci.pred_objects_sorted(p))
+        assert pi.pred_count(p) == ci.pred_count(p)
+    for cid in pi.classes().tolist():
+        np.testing.assert_array_equal(pi.entities_of_class(cid),
+                                      ci.entities_of_class(cid))
+        np.testing.assert_array_equal(pi.class_properties(cid),
+                                      ci.class_properties(cid))
+        props = pi.class_properties(cid)[:3]
+        if props.shape[0]:
+            pm = pi.object_matrix(cid, props)
+            cm = ci.object_matrix(cid, props)
+            for a, b in zip(pm, cm):
+                np.testing.assert_array_equal(a, b)
+            assert pi.labeled_edge_count(cid) == ci.labeled_edge_count(cid)
+    np.testing.assert_array_equal(pi.rows, ci.rows)
+
+
+def test_compressed_rows_and_accounting(tier_pair):
+    _, plain, comp = tier_pair
+    np.testing.assert_array_equal(plain.spo, comp.spo)
+    assert comp.n_triples == plain.n_triples
+    assert comp.substrate_nbytes() < 0.5 * plain.substrate_nbytes()
+
+
+def test_mutation_returns_plain_tier(tier_pair):
+    """filtered/merged leave the read-optimized tier: mutating a
+    compressed index re-materializes a plain GraphIndex (recompression
+    is the caller's explicit, paid-for step)."""
+    from repro.core.index import GraphIndex
+    _, plain, comp = tier_pair
+    keep = np.ones(plain.n_triples, dtype=bool)
+    keep[:: 7] = False
+    fi = comp.index.filtered(keep)
+    assert type(fi) is GraphIndex
+    np.testing.assert_array_equal(fi.rows, plain.index.filtered(keep).rows)
+
+
+def test_detect_and_query_digest_parity(tier_pair):
+    shape, plain, comp = tier_pair
+    cp, cc = Compactor(detector="gfsp"), Compactor(detector="gfsp")
+    cp.run(plain)
+    cc.run(comp, stream=True)
+    assert cp.snapshot.digest() == cc.snapshot.digest()
+
+    queries = []
+    for cid, t in sorted(cp.fgraph.tables.items()):
+        for row in t.objects[:4]:
+            queries.append(StarQuery(
+                arms=tuple((int(p), int(o))
+                           for p, o in zip(t.props, row)),
+                class_id=cid))
+            queries.append(StarQuery(
+                arms=((int(t.props[0]), int(row[0])),
+                      (int(t.props[-1]), None)), class_id=cid))
+    if not queries:
+        pytest.skip(f"{shape} produced no factorized tables at this size")
+    rp = QueryEngine(cp.snapshot.fgraph).query_batch(queries)
+    rc = QueryEngine(cc.snapshot.fgraph).query_batch(queries)
+    for a, b in zip(rp, rc):
+        assert a.same_as(b)
+
+
+def test_streamed_detection_bounds_resident_decodes(tier_pair):
+    """stream=True must release per-class decodes between classes:
+    peak resident bytes stay a fraction of the plain substrate."""
+    _, plain, comp = tier_pair
+    from repro.core import sweep as core_sweep
+    core_sweep.reset_trace_stats()
+    Compactor(detector="gfsp").run(comp, stream=True)
+    peak = DECODE_STATS["peak_resident_bytes"]
+    assert 0 < peak < 0.5 * plain.substrate_nbytes()
+
+
+# -- workload-generator family ------------------------------------------------
+
+@pytest.mark.parametrize("shape", WORKLOAD_SHAPES)
+def test_workload_shapes_generate_and_detect(shape):
+    store = generate_workload(WorkloadSpec(
+        shape=shape, n_triples=3_000, seed=5))
+    assert isinstance(store, TripleStore)
+    # budget adherence: close to (never wildly past) the request
+    assert 0.5 * 3_000 <= store.n_triples <= 1.3 * 3_000
+    assert store.index.classes().shape[0] > 0
+    # determinism: same spec, same bytes; different seed, different graph
+    again = generate_workload(WorkloadSpec(
+        shape=shape, n_triples=3_000, seed=5))
+    np.testing.assert_array_equal(store.spo, again.spo)
+    other = generate_workload(WorkloadSpec(
+        shape=shape, n_triples=3_000, seed=6))
+    assert (store.n_triples != other.n_triples
+            or not np.array_equal(store.spo, other.spo))
+
+
+def test_adversarial_shape_resists_compaction():
+    store = generate_workload(WorkloadSpec(
+        shape="adversarial", n_triples=3_000, seed=5))
+    comp = Compactor(detector="gfsp")
+    comp.run(store)
+    # unique objects per entity leave nothing frequent to factorize:
+    # compaction must not pay here (no or near-no savings)
+    assert comp.snapshot.n_triples >= 0.95 * store.n_triples
+
+
+# -- snapshot digest memo -----------------------------------------------------
+
+def test_snapshot_digest_is_memoized_per_epoch():
+    store = generate_workload(WorkloadSpec(
+        shape="sensor", n_triples=2_000, seed=3))
+    comp = Compactor(detector="gfsp")
+    comp.run(store)
+    snap = comp.snapshot
+    assert not snap._digest_cache
+    d1 = snap.digest()
+    assert snap._digest_cache == [d1]
+    assert snap.digest() is d1          # memo hit, not a recompute
+    # a new epoch is a NEW snapshot object -> fresh (empty) memo
+    comp2 = Compactor(detector="gfsp")
+    comp2.run(store)
+    assert comp2.snapshot is not snap
+    assert comp2.snapshot.digest() == d1
