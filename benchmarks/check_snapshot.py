@@ -55,6 +55,16 @@ Asserts the structural invariants the bench-smoke job exists to protect:
    substrate (peak RSS ~ largest class bucket, not the graph), stays
    under per-scale whole-process RSS budgets, and the per-cell
    no-recompaction-twin soak never shows recompaction losing edges.
+9. **Crash durability holds** -- the recovery matrix (raise-mode
+   crash-point sweep over every fault-injection site) must show every
+   site x occurrence cell actually crashing, recovering from the WAL +
+   checkpoint with a drained queue, and finishing digest-identical to
+   the uninterrupted reference (zero lost or duplicated writes); every
+   recovery records a positive checkpoint size and its replay cost.
+   The drift soak's service must also carry the fault-telemetry
+   channels (``fault.retries``, ``fault.dead_workers``,
+   ``ingest.unknown_deletes``) so retry storms, dead workers, and
+   silently-dropped deletes are visible per commit.
 
     python -m benchmarks.check_snapshot [path/to/BENCH_fsp.json]
 """
@@ -159,6 +169,7 @@ def check(path: str = DEFAULT_PATH) -> list[str]:
     errors.extend(check_query(snap.get("query")))
     errors.extend(check_bgp(snap.get("bgp")))
     errors.extend(check_drift(snap.get("drift")))
+    errors.extend(check_recovery(snap.get("recovery")))
     errors.extend(check_scale(snap.get("scale")))
     return errors
 
@@ -426,6 +437,54 @@ def check_drift(drift: dict | None) -> list[str]:
     elif not any(r.get("n_dirty") for r in rows):
         errors.append("drift: soak never marked a class dirty -- the "
                       "workload no longer exercises re-detection")
+    # fault telemetry must be wired even when nothing fired: the
+    # channels are pre-registered by the service, so their absence
+    # means the wiring regressed, not that the run was healthy
+    metrics = drift.get("metrics", {})
+    for ch in ("fault.retries", "fault.dead_workers",
+               "ingest.unknown_deletes"):
+        if ch not in metrics:
+            errors.append(f"drift: metrics summary lost the {ch!r} "
+                          f"fault-telemetry channel")
+    return errors
+
+
+# every injection site the crash-point sweep must cover (mirrors
+# repro.dist.fault.SITES; listed literally so a silently-shrunk sweep
+# fails the gate instead of passing over fewer sites)
+RECOVERY_SITES = ("wal.append", "apply", "pre_swap", "post_swap",
+                  "checkpoint.write", "redetect")
+
+
+def check_recovery(recovery: dict | None) -> list[str]:
+    """Gate the crash-point recovery matrix (module docstring, item 9)."""
+    errors: list[str] = []
+    if not recovery:
+        errors.append("snapshot has no recovery matrix (rerun --snapshot)")
+        return errors
+    cells = recovery.get("cells", [])
+    swept = {c.get("site") for c in cells}
+    for site in RECOVERY_SITES:
+        if site not in swept:
+            errors.append(f"recovery: injection site {site!r} was never "
+                          f"swept")
+    for c in cells:
+        tag = f"recovery[{c.get('site')}@occ{c.get('occurrence')}]"
+        if not c.get("crashed"):
+            errors.append(f"{tag} never crashed -- the fault site is "
+                          f"dead code or the workload stopped reaching it")
+        if not c.get("parity"):
+            errors.append(f"{tag} recovered digest diverged from the "
+                          f"uninterrupted reference (lost or duplicated "
+                          f"writes)")
+        if not c.get("drained"):
+            errors.append(f"{tag} recovered queue did not drain")
+        if c.get("n_recoveries", 0) > 0:
+            if c.get("checkpoint_bytes", 0) <= 0:
+                errors.append(f"{tag} recovery recorded no checkpoint "
+                              f"bytes")
+            if "replay_ms" not in c:
+                errors.append(f"{tag} recovery recorded no replay cost")
     return errors
 
 

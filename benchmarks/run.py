@@ -175,6 +175,7 @@ def snapshot(fast: bool = True, scale: str | None = None) -> dict:
         "query": query_matrix(fast=fast),
         "bgp": bgp_matrix(fast=fast),
         "drift": drift_matrix(fast=fast),
+        "recovery": recovery_matrix(fast=fast),
     }
     # the scale grid is minutes of subprocesses: refresh it only when
     # asked ("full"), otherwise carry the committed section forward so
@@ -202,6 +203,111 @@ def snapshot(fast: bool = True, scale: str | None = None) -> dict:
               f"evals={c['evaluations']:<6d} "
               f"savings={c['pct_savings_triples']:.2f}%")
     return out
+
+
+def recovery_matrix(fast: bool = True) -> dict:
+    """Crash-point recovery sweep: durability as a gated number.
+
+    A durable service (WAL + sync checkpoints every 3 applies) ingests
+    a deterministic drift-heavy workload -- typed complete entities
+    with novel object tuples, so re-detection genuinely runs -- while a
+    seeded raise-mode :class:`~repro.dist.fault.FaultPlan` crashes it
+    at ONE injection site.  The driver then :func:`~repro.online.recover`\\ s
+    from disk and resubmits the interrupted batch (idempotent: RDF
+    set semantics) and the run continues.  Every site x occurrence
+    cell must (a) actually crash and (b) finish digest-identical to an
+    uninterrupted plain-service reference over the same term-level
+    batches -- zero lost or duplicated writes.  Per-cell recovery
+    costs (checkpoint bytes, WAL replay ms, batches/mints replayed)
+    are recorded; ``benchmarks.check_snapshot`` gates all of it."""
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro.data.synthetic import SensorGraphSpec, generate
+    from repro.dist.fault import SITES, FaultPlan, InjectedFault
+    from repro.online import OnlineCompactionService, recover
+
+    def build_store():
+        return generate(SensorGraphSpec(n_observations=60, seed=5))
+
+    def batches(store, n):
+        """Deterministic term-level batches: complete typed entities
+        with pairwise-novel object tuples (support-1 surrogates feed
+        the drift tracker), every third batch deleting an earlier
+        insert."""
+        term = store.dict.term
+        cid = int(store.classes()[0])
+        props = np.asarray(store.class_properties(cid))
+        cterm, tterm = term(cid), term(store.TYPE)
+        pterms = [term(int(p)) for p in props]
+        out = []
+        for i in range(n):
+            ins = []
+            for j in range(3):
+                s = f"e:n/b{i}/{j}"
+                ins.append((s, tterm, cterm))
+                ins += [(s, p, f"o:novel/b{i}/{j}/{k}")
+                        for k, p in enumerate(pterms)]
+            dels = [f"e:n/b{i - 2}/0"] if i % 3 == 2 else None
+            out.append((ins, dels))
+        return out
+
+    kw = dict(detector="gfsp", backend="host", raw_residue_threshold=4,
+              support_drift_threshold=3, retry_sleep=lambda _: None)
+    n_batches = 10 if fast else 20
+    seq = batches(build_store(), n_batches)
+
+    ref = OnlineCompactionService(build_store(), **kw)
+    for ins, dels in seq:
+        ref.submit(inserts=ins, delete_entities=dels)
+        ref.drain()
+    ref_digest = ref.snapshot.digest()
+
+    cells = []
+    for site in SITES:
+        for occ in (0, 1):
+            root = tempfile.mkdtemp(prefix="fsp_recovery_")
+            svc = OnlineCompactionService.durable(
+                root, build_store(),
+                fault_plan=FaultPlan(site, occurrence=occ),
+                checkpoint_every=3, checkpoint_async=False, **kw)
+            crashed, recoveries = False, 0
+            for ins, dels in seq:
+                for _ in range(2):
+                    try:
+                        svc.submit(inserts=ins, delete_entities=dels)
+                        svc.drain()
+                        break
+                    except InjectedFault:
+                        crashed = True
+                        recoveries += 1
+                        svc = recover(root, **kw)
+                else:
+                    raise AssertionError(f"{site} kept crashing")
+            svc.close()
+            rec = svc.last_recovery
+            cells.append({
+                "site": site, "occurrence": occ,
+                "crashed": crashed,
+                "parity": svc.snapshot.digest() == ref_digest,
+                "drained": svc.queue.depth == 0,
+                "n_recoveries": recoveries,
+                "checkpoint_bytes": rec.checkpoint_bytes if rec else 0,
+                "replay_ms": round(rec.replay_ms, 3) if rec else 0.0,
+                "batches_replayed": rec.batches_pending if rec else 0,
+                "mints_replayed": rec.mints_replayed if rec else 0,
+            })
+            shutil.rmtree(root, ignore_errors=True)
+            c = cells[-1]
+            print(f"recovery {site:18s} occ={occ} "
+                  f"crashed={c['crashed']} parity={c['parity']} "
+                  f"ckpt={c['checkpoint_bytes']}B "
+                  f"replay={c['replay_ms']:.1f}ms "
+                  f"batches={c['batches_replayed']}")
+    return {"n_batches": n_batches, "ref_digest": ref_digest,
+            "sites": list(SITES), "cells": cells}
 
 
 def drift_matrix(fast: bool = True) -> dict:

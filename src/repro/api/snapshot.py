@@ -245,6 +245,50 @@ class GraphSnapshot:
             ).hexdigest()[:16])
         return self._digest_cache[0]
 
+    def to_state(self) -> tuple[dict[str, np.ndarray], dict]:
+        """Decompose into (named arrays, JSON-safe meta) for durable
+        checkpoints (``repro.online.recovery``).
+
+        The dictionary is deliberately NOT here -- it is shared,
+        append-only state owned by the service, checkpointed as a term-
+        list prefix alongside.  The instanceOf CSR, surrogate locator
+        and ``GraphIndex`` are all rebuilt from ``spo`` + tables by the
+        :class:`FactorizedGraph` constructor, so they need no bytes on
+        disk.  Everything referenced is immutable, so serialization may
+        run on a background thread while the service keeps swapping."""
+        fg = self.fgraph
+        arrays: dict[str, np.ndarray] = {"spo": fg.store.spo}
+        meta = {"epoch": int(self.epoch),
+                "payoff_min_support": int(fg.payoff_min_support),
+                "tables": []}
+        for cid in sorted(fg.tables):
+            t = fg.tables[cid]
+            arrays[f"table_{cid}_surrogates"] = t.surrogates
+            arrays[f"table_{cid}_objects"] = t.objects
+            meta["tables"].append({"class_id": int(cid),
+                                   "props": [int(p) for p in t.props],
+                                   "next_ordinal": int(t.next_ordinal)})
+        return arrays, meta
+
+    @classmethod
+    def from_state(cls, dictionary, arrays: dict[str, np.ndarray],
+                   meta: dict) -> "GraphSnapshot":
+        """Inverse of :meth:`to_state` over a restored dictionary."""
+        store = TripleStore.from_ids(dictionary, arrays["spo"],
+                                     presorted=True)
+        tables = {}
+        for ent in meta["tables"]:
+            cid = int(ent["class_id"])
+            tables[cid] = MoleculeTable(
+                class_id=cid, props=tuple(ent["props"]),
+                surrogates=arrays[f"table_{cid}_surrogates"],
+                objects=arrays[f"table_{cid}_objects"],
+                next_ordinal=int(ent["next_ordinal"]), presorted=True)
+        fg = FactorizedGraph(
+            store, tables,
+            payoff_min_support=int(meta["payoff_min_support"]))
+        return cls(fgraph=fg, epoch=int(meta["epoch"]))
+
     def __repr__(self) -> str:  # pragma: no cover
         return (f"GraphSnapshot(epoch={self.epoch}, "
                 f"n_triples={self.n_triples}, "

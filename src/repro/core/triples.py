@@ -74,6 +74,21 @@ class TermDict:
         return np.fromiter((index[t] for t in terms), np.int32,
                            count=len(terms))
 
+    @classmethod
+    def from_terms(cls, terms: Iterable[str]) -> "TermDict":
+        """Rebuild a dictionary from its term list, ids = positions.
+
+        The recovery path (``repro.online.recovery``) checkpoints the
+        dictionary as the ordered term list alone -- ids are implied by
+        allocation order, so restoring the exact list restores the
+        exact id assignment."""
+        d = cls()
+        d._terms = list(terms)
+        d._index = {t: i for i, t in enumerate(d._terms)}
+        if len(d._index) != len(d._terms):
+            raise ValueError("duplicate terms in from_terms input")
+        return d
+
     def lookup(self, term: str) -> int | None:
         return self._index.get(term)
 

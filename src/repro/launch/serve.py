@@ -182,7 +182,8 @@ def serve_bgp_queries(n_requests: int, *, n_observations: int = 600,
 
 def serve_online(n_batches: int = 20, *, n_observations: int = 80,
                  seed: int = 0, backend: str = "device",
-                 assert_gates: bool = True) -> dict:
+                 assert_gates: bool = True, durable_root: str | None = None,
+                 chaos_seed: int | None = None) -> dict:
     """Soak the online compaction service with mixed ingest batches.
 
     Drives ``n_batches`` mixed insert/delete batches through an
@@ -210,21 +211,76 @@ def serve_online(n_batches: int = 20, *, n_observations: int = 80,
     latency, queue depth, dirty-class count, edge counts) plus the
     metrics-channel summaries -- ``benchmarks/run.py`` embeds this dict
     in ``BENCH_fsp.json`` and ``check_snapshot.py`` gates it.
+
+    **Durable mode** (``durable_root``): the service journals every
+    batch to an on-disk WAL and checkpoints under ``durable_root``.  If
+    the root already holds a valid checkpoint (this process is a
+    RESTART after a crash) the soak does not re-run the workload:
+    it recovers, drains whatever the journal preserved, and gates the
+    recovered state -- queue fully drained, digest identical to a
+    from-scratch ``Compactor`` over the recovered net graph, recovery
+    metrics recorded.  ``chaos_seed`` arms a seeded kill-mode
+    :class:`~repro.dist.fault.FaultPlan` (SIGKILL at a random injection
+    site) on FRESH durable runs only; the CI soak runs once expecting
+    exit 137, then reruns the same command to prove recovery.
     """
     from repro.api import Compactor
     from repro.core import sweep as core_sweep
     from repro.data.synthetic import SensorGraphSpec, generate
+    from repro.dist.fault import FaultPlan
     from repro.online import OnlineCompactionService
+    from repro.online.recovery import has_state
+
+    svc_kw = dict(detector="gfsp", backend=backend,
+                  raw_residue_threshold=6, support_drift_threshold=4,
+                  max_backoff=1)
+
+    if durable_root is not None and has_state(durable_root):
+        # RESTART path: the journal + checkpoint are the workload now
+        svc = OnlineCompactionService.durable(durable_root, **svc_kw)
+        reps = svc.drain()
+        rec = svc.last_recovery.as_dict() if svc.last_recovery else {}
+        net = svc.snapshot.fgraph.expand()
+        comp = Compactor(detector="gfsp", backend=backend)
+        comp.run(net)
+        result = {
+            "recovered": True,
+            "drained": svc.queue.depth == 0,
+            "batches_drained_after_recovery": len(reps),
+            "batch_parity_digest": comp.snapshot.digest()
+            == svc.snapshot.digest(),
+            "recovery": rec,
+            "metrics": svc.metrics_summary(),
+        }
+        svc.close()
+        if assert_gates:
+            assert result["drained"], "recovered queue not drained"
+            assert result["batch_parity_digest"], \
+                "recovered state != from-scratch compaction of its net graph"
+            assert rec.get("checkpoint_bytes", 0) > 0, rec
+        print(f"online soak (recovery): checkpoint step "
+              f"{rec.get('checkpoint_step')} "
+              f"({rec.get('checkpoint_bytes', 0)} bytes), "
+              f"{rec.get('mints_replayed', 0)} mints + "
+              f"{rec.get('batches_pending', 0)} batches replayed in "
+              f"{rec.get('replay_ms', 0.0):.1f} ms, "
+            f"{len(reps)} drained post-recovery, gates "
+            f"{'PASS' if assert_gates else 'recorded'}")
+        return result
 
     store = generate(SensorGraphSpec(n_observations=n_observations,
                                      seed=seed))
     # max_backoff=1: the drift cohort's re-plan is rejected until enough
     # singletons accumulate, and a deep rejection backoff would push the
     # eventually-accepted pass past this soak's short horizon
-    svc = OnlineCompactionService(store, detector="gfsp", backend=backend,
-                                  raw_residue_threshold=6,
-                                  support_drift_threshold=4,
-                                  max_backoff=1)
+    if durable_root is not None:
+        plan = (None if chaos_seed is None
+                else FaultPlan.seeded(chaos_seed, mode="kill"))
+        svc = OnlineCompactionService.durable(
+            durable_root, store, checkpoint_every=3,
+            checkpoint_async=False, fault_plan=plan, **svc_kw)
+    else:
+        svc = OnlineCompactionService(store, **svc_kw)
     base = OnlineCompactionService(store, detector="gfsp", backend=backend,
                                    auto_redetect=False)
     rng = np.random.default_rng(seed)
@@ -332,6 +388,11 @@ def serve_online(n_batches: int = 20, *, n_observations: int = 80,
         "rows": drift_rows,
         "metrics": svc.metrics_summary(),
     }
+    if durable_root is not None:
+        result["durable"] = True
+        result["wal_segments"] = svc.wal.n_segments
+        svc.checkpoint(wait=True)
+        svc.close()
     if assert_gates:
         assert result["drained"], "ingest queue not drained"
         assert result["warm_redetect_traces"] == 0, \
@@ -384,10 +445,20 @@ def main(argv=None) -> dict:
                          "and gate the service-level guarantees")
     ap.add_argument("--online-batches", type=int, default=20,
                     help="ingest batches for --online")
+    ap.add_argument("--durable", default=None, metavar="DIR",
+                    help="durable root for --online: WAL + checkpoints "
+                         "under DIR; with existing state, recover and "
+                         "gate instead of re-running the workload")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="arm a seeded kill-mode fault plan (SIGKILL at "
+                         "a random injection site) on a fresh --durable "
+                         "run; restart the same command to recover")
     args = ap.parse_args(argv)
 
     if args.online:
-        return serve_online(args.online_batches, seed=args.seed)
+        return serve_online(args.online_batches, seed=args.seed,
+                            durable_root=args.durable,
+                            chaos_seed=args.chaos)
 
     if args.bgp:
         return serve_bgp_queries(args.bgp, seed=args.seed,

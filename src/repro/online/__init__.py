@@ -27,5 +27,7 @@ snapshot handle and never block on any of this.
 """
 from .drift import DriftTracker  # noqa: F401
 from .metrics import Channel, MetricsHub  # noqa: F401
+from .recovery import (RecoveryError, RecoveryReport,  # noqa: F401
+                       SnapshotCheckpointer, recover)
 from .service import BatchReport, OnlineCompactionService  # noqa: F401
-from .wal import IngestBatch, IngestQueue  # noqa: F401
+from .wal import DurableWAL, IngestBatch, IngestQueue  # noqa: F401

@@ -100,6 +100,28 @@ class DriftTracker:
             else:
                 self._backoff.pop(cid, None)
 
+    def state_dict(self) -> dict:
+        """JSON-serializable counter state (for checkpoints).  Residue
+        baselines are part of the re-detection decision, so recovery
+        must restore them exactly or the replayed drift decisions -- and
+        with them the recovered digest -- could diverge."""
+        return {
+            "baseline": {str(k): v for k, v in self._baseline.items()},
+            "support_drift": {str(k): v
+                              for k, v in self._support_drift.items()},
+            "touched": sorted(self._touched),
+            "backoff": {str(k): v for k, v in self._backoff.items()},
+        }
+
+    def load_state(self, state: dict) -> None:
+        self._baseline = {int(k): int(v)
+                          for k, v in state["baseline"].items()}
+        self._support_drift = {int(k): int(v)
+                               for k, v in state["support_drift"].items()}
+        self._touched = {int(c) for c in state["touched"]}
+        self._backoff = {int(k): int(v)
+                         for k, v in state["backoff"].items()}
+
     # -- incremental feeds -------------------------------------------------
     def observe_update(self, report) -> None:
         """Fold one ``UpdateReport`` in: touched classes join the watch

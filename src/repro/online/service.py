@@ -17,21 +17,40 @@ see torn state.  The write-ahead ordering (apply -> swap -> mark)
 means a failure anywhere leaves the head batch queued and the old
 snapshot live: nothing is lost, the step just reruns.
 
+**Durability** (optional): give the service a
+:class:`~repro.online.wal.DurableWAL` and a
+:class:`~repro.online.recovery.SnapshotCheckpointer` (or open it via
+:meth:`OnlineCompactionService.durable`) and the write-ahead discipline
+extends across process death: every dictionary-tail mint and every
+batch is journaled at ``submit`` time, every committed apply run is
+journaled with its coalescing, and every ``checkpoint_every`` applied
+batches the full snapshot state checkpoints on a background thread
+(atomic rename; the journal GCs segments a checkpoint covers).
+``repro.online.recovery.recover`` rebuilds the exact pre-crash state.
+Named fault-injection sites (``dist.fault.SITES``) are threaded
+through the loop so a seeded :class:`~repro.dist.fault.FaultPlan` can
+crash any point of the lifecycle deterministically.
+
 Re-detection is the expensive part, so it is wrapped in
-``dist.fault.retry`` with a ``dist.fault.Monitor`` heartbeat: a failed
-or straggling pass is retried with backoff, and if every attempt fails
-the dirty classes simply STAY dirty (counters intact) while ingest
-continues -- availability over freshness.
+``dist.fault.retry`` (decorrelated jitter + a ``retry_deadline_s``
+budget so a slow pass cannot block the writer unboundedly) with a
+``dist.fault.Monitor`` heartbeat: retries land in the
+``fault.retries`` channel, dead heartbeats in ``fault.dead_workers``,
+and if every attempt fails the dirty classes simply STAY dirty
+(counters intact) while ingest continues -- availability over
+freshness.
 
 Every step feeds the accumulator metrics channels (``queue.depth``,
-``ingest.batch_ms``, ``redetect.ms``, ``redetect.dirty_classes``,
-``swap.count``, ``savings.<class>``, ...): per-batch last value plus
-running summaries, exported by :meth:`metrics_summary` and
+``ingest.batch_ms``, ``ingest.unknown_deletes``, ``redetect.ms``,
+``redetect.dirty_classes``, ``swap.count``, ``checkpoint.bytes``,
+``savings.<class>``, ...): per-batch last value plus running
+summaries, exported by :meth:`metrics_summary` and
 ``launch/serve.py --online``.
 """
 from __future__ import annotations
 
 import dataclasses
+import random
 import threading
 import time
 
@@ -45,7 +64,7 @@ from repro.dist import fault
 
 from .drift import DriftTracker
 from .metrics import MetricsHub
-from .wal import IngestBatch, IngestQueue
+from .wal import DurableWAL, IngestBatch, IngestQueue
 
 
 @dataclasses.dataclass
@@ -85,10 +104,16 @@ class OnlineCompactionService:
                  monitor: fault.Monitor | None = None,
                  redetect_deadline_s: float = 30.0,
                  retry_attempts: int = 3, retry_base_s: float = 0.01,
+                 retry_deadline_s: float | None = 60.0,
                  retry_sleep=None,
                  auto_redetect: bool = True,
                  coalesce: bool = True,
-                 max_coalesce: int | None = None) -> None:
+                 max_coalesce: int | None = None,
+                 wal: DurableWAL | None = None,
+                 checkpointer=None,
+                 checkpoint_every: int = 8,
+                 checkpoint_async: bool = True,
+                 fault_plan: fault.FaultPlan | None = None) -> None:
         self.planner = planner or CompactionPlanner(
             detector, backend,
             min_predicted_savings=min_predicted_savings)
@@ -108,20 +133,75 @@ class OnlineCompactionService:
             max_backoff=max_backoff)
         self.drift.prime(snap.fgraph)
         self.metrics = metrics or MetricsHub()
+        # pre-register the soak's gate channels so a clean run exports
+        # them with count 0 instead of omitting them
+        for ch in ("fault.retries", "fault.dead_workers",
+                   "ingest.unknown_deletes"):
+            self.metrics.channel(ch)
         self.monitor = monitor or fault.Monitor(
             deadline_s=redetect_deadline_s,
+            on_dead=lambda w: self.metrics.observe(
+                "fault.dead_workers", 1),
             on_straggler=lambda w: self.metrics.observe(
                 "redetect.stragglers", 1))
         self.retry_attempts = int(retry_attempts)
         self.retry_base_s = float(retry_base_s)
+        self.retry_deadline_s = retry_deadline_s
         self._retry_sleep = retry_sleep if retry_sleep is not None \
             else time.sleep
+        self._retry_rng = random.Random(0)
         self.auto_redetect = bool(auto_redetect)
         self.coalesce = bool(coalesce)
         self.max_coalesce = max_coalesce
         self.swap_count = 0
         self._swap_lock = threading.Lock()
         self._redetect_step = 0
+        # -- durability ----------------------------------------------------
+        self.wal = wal
+        self.checkpointer = checkpointer
+        self.checkpoint_every = int(checkpoint_every)
+        self.checkpoint_async = bool(checkpoint_async)
+        self.fault_plan = fault_plan
+        self.last_recovery = None
+        self._applied_seq = -1
+        self._since_checkpoint = 0
+        self._ckpt_thread: threading.Thread | None = None
+        self._ckpt_error: BaseException | None = None
+        # every dict id below this is journaled (or checkpoint-covered);
+        # construction mints (initial compaction) are covered by the
+        # initial checkpoint ``durable()`` writes, never by the WAL
+        self._minted_upto = len(snap.store.dict) if wal is not None else 0
+
+    @classmethod
+    def durable(cls, root: str, source=None, *, wal_kwargs=None,
+                keep: int = 3, **kwargs) -> "OnlineCompactionService":
+        """Open-or-recover a durable service rooted at ``root``.
+
+        With a valid checkpoint under ``root`` this is
+        :func:`repro.online.recovery.recover` (``source`` is ignored;
+        ``kwargs`` must match the pre-crash configuration).  Otherwise
+        ``source`` seeds a fresh service whose initial compacted state
+        is checkpointed immediately -- the armed ``fault_plan`` (if
+        any) only goes live after that, so chaos targets the ingest
+        lifecycle, not construction.
+        """
+        from .recovery import (SnapshotCheckpointer, ckpt_dir, has_state,
+                               recover, wal_dir)
+        if has_state(root):
+            return recover(root, wal_kwargs=wal_kwargs, keep=keep,
+                           **kwargs)
+        if source is None:
+            raise FileNotFoundError(
+                f"no durable state under {root} and no source given")
+        plan = kwargs.pop("fault_plan", None)
+        svc = cls(source,
+                  wal=DurableWAL(wal_dir(root), **(wal_kwargs or {})),
+                  checkpointer=SnapshotCheckpointer(ckpt_dir(root),
+                                                    keep=keep),
+                  **kwargs)
+        svc.checkpoint(wait=True)
+        svc.fault_plan = plan
+        return svc
 
     # -- read side ---------------------------------------------------------
     @property
@@ -134,8 +214,92 @@ class OnlineCompactionService:
     def fgraph(self) -> FactorizedGraph:
         return self._snapshot.fgraph
 
+    @property
+    def applied_seq(self) -> int:
+        """Highest committed batch seq (-1 before the first apply)."""
+        return self._applied_seq
+
     def metrics_summary(self) -> dict[str, dict]:
         return self.metrics.summary()
+
+    # -- durability plumbing -----------------------------------------------
+    def _fire(self, site: str) -> None:
+        if self.fault_plan is not None:
+            self.fault_plan.fire(site)
+
+    def _log_mints(self) -> None:
+        """Journal every dictionary id minted since the last call, in
+        allocation order (submit-time term mints AND apply/redetect-time
+        surrogate mints share the one append-only id space)."""
+        if self.wal is None:
+            return
+        d = self._snapshot.store.dict
+        n = len(d)
+        if n > self._minted_upto:
+            self.wal.append_mints(
+                [(i, d.term(i)) for i in range(self._minted_upto, n)])
+            self._minted_upto = n
+
+    def checkpoint(self, *, wait: bool = False) -> None:
+        """Checkpoint the current state (snapshot + dictionary prefix +
+        drift counters + applied seq).  Serialization runs on a
+        background thread unless ``checkpoint_async=False`` -- every
+        array it touches is immutable, so the writer loop keeps going.
+        A damaged in-flight write surfaces on the next call (or
+        :meth:`close`); the previous checkpoint on disk stays valid."""
+        if self.checkpointer is None:
+            raise RuntimeError("service has no checkpointer")
+        self._join_checkpoint()
+        self._log_mints()
+        if self.wal is not None:
+            self.wal.sync()
+        snap = self._snapshot
+        args = (snap, self._applied_seq, len(snap.store.dict),
+                self.drift.state_dict())
+        self._since_checkpoint = 0
+        if self.checkpoint_async:
+            self._ckpt_thread = threading.Thread(
+                target=self._write_checkpoint, args=(*args, False),
+                daemon=True)
+            self._ckpt_thread.start()
+            if wait:
+                self._join_checkpoint()
+        else:
+            self._write_checkpoint(*args, True)
+
+    def _write_checkpoint(self, snap, applied_seq, n_terms, drift_state,
+                          reraise) -> None:
+        try:
+            path = self.checkpointer.write(
+                snapshot=snap, applied_seq=applied_seq, n_terms=n_terms,
+                drift=drift_state, fire=self._fire)
+            from .recovery import _dir_bytes
+            self.metrics.observe("checkpoint.bytes", _dir_bytes(path))
+            self.metrics.observe("checkpoint.count", 1)
+            if self.wal is not None:
+                removed = self.wal.gc(applied_seq, n_terms)
+                if removed:
+                    self.metrics.observe("wal.segments_gcd", removed)
+        except BaseException as e:
+            self.metrics.observe("checkpoint.failures", 1)
+            if reraise:
+                raise
+            self._ckpt_error = e
+
+    def _join_checkpoint(self) -> None:
+        t = self._ckpt_thread
+        if t is not None:
+            t.join()
+            self._ckpt_thread = None
+        err, self._ckpt_error = self._ckpt_error, None
+        if err is not None:
+            raise err
+
+    def close(self) -> None:
+        """Flush the journal and wait for any in-flight checkpoint."""
+        self._join_checkpoint()
+        if self.wal is not None:
+            self.wal.close()
 
     # -- write side --------------------------------------------------------
     def submit(self, inserts=None, delete_triples=None,
@@ -146,30 +310,48 @@ class OnlineCompactionService:
         dictionary: insert terms mint ids (append-only, so encoding
         ahead of apply is safe), delete terms use ``lookup`` -- a term
         the graph has never seen cannot name an existing triple, so
-        unknown deletes drop out as no-ops without growing the dict.
+        unknown deletes drop out as no-ops, counted in the
+        ``ingest.unknown_deletes`` channel (a growing count means the
+        caller's view of the dictionary has skewed).  With a WAL
+        attached, the minted tail and the batch are journaled before
+        ``submit`` returns; a crash at the ``wal.append`` site means
+        the batch was never accepted (the caller re-submits).
         """
+        self._fire("wal.append")
         d = self._snapshot.store.dict
+        unknown = 0
+        term_level_delete = False
         if inserts is not None and not isinstance(inserts, np.ndarray):
             trips = list(inserts)
             inserts = (d.ids([t for spo in trips for t in spo])
                        .reshape(-1, 3) if trips else None)
         if delete_triples is not None and \
                 not isinstance(delete_triples, np.ndarray):
+            term_level_delete = True
             rows = []
             for s, p, o in delete_triples:
                 ids3 = (d.lookup(s), d.lookup(p), d.lookup(o))
                 if None not in ids3:
                     rows.append(ids3)
+                else:
+                    unknown += 1
             delete_triples = np.asarray(rows, np.int32).reshape(-1, 3) \
                 if rows else None
         if delete_entities is not None and \
                 not isinstance(delete_entities, np.ndarray):
+            term_level_delete = True
             ids = [d.lookup(e) for e in delete_entities]
+            unknown += sum(1 for i in ids if i is None)
             ids = [i for i in ids if i is not None]
             delete_entities = np.asarray(ids, np.int64) if ids else None
+        if term_level_delete:
+            self.metrics.observe("ingest.unknown_deletes", unknown)
         batch = self.queue.append(inserts=inserts,
                                   delete_triples=delete_triples,
                                   delete_entities=delete_entities)
+        if self.wal is not None:
+            self._log_mints()
+            self.wal.append_batch(batch)
         self.metrics.observe("queue.depth", self.queue.depth)
         return batch
 
@@ -192,6 +374,24 @@ class OnlineCompactionService:
             batches = [head] if head is not None else []
         if not batches:
             return None
+        return self._apply_run(batches)
+
+    def apply_exact(self, seqs) -> BatchReport:
+        """Apply EXACTLY the head run ``seqs`` as one merged step.
+
+        The recovery path re-applying a journaled ``APPLY`` group: the
+        grouping must match the pre-crash coalescing or drift
+        accounting (and with it re-detection and mint order) would
+        diverge from the uninterrupted run."""
+        want = [int(s) for s in seqs]
+        head = list(self.queue.peek_coalesced(len(want)))
+        got = [b.seq for b in head[:len(want)]]
+        if got != want:
+            raise ValueError(f"apply_exact({want}) does not match the "
+                             f"queue head run {got}")
+        return self._apply_run(head[:len(want)])
+
+    def _apply_run(self, batches: list[IngestBatch]) -> BatchReport:
         t0 = time.perf_counter()
         snap = self._snapshot
         epoch_before = snap.epoch
@@ -202,6 +402,7 @@ class OnlineCompactionService:
         last = batches[-1]
         inserts = (batches[0].inserts if len(batches) == 1
                    else np.concatenate([b.inserts for b in batches]))
+        self._fire("apply")
         upd = dele = None
         if inserts.shape[0]:
             snap, upd = self.planner.apply_update(snap, inserts)
@@ -212,10 +413,16 @@ class OnlineCompactionService:
                          if last.delete_triples.shape[0] else None),
                 entities=(last.delete_entities
                           if last.delete_entities.shape[0] else None))
+        self._log_mints()                  # surrogate mints, pre-swap
+        self._fire("pre_swap")
         if snap is not self._snapshot:
             self._swap(snap)
+        self._fire("post_swap")
+        if self.wal is not None:
+            self.wal.append_applied([b.seq for b in batches])
         # commit point: swap landed; drop the whole run in order
         self.queue.mark_applied_through([b.seq for b in batches])
+        self._applied_seq = last.seq
         self.metrics.observe("ingest.coalesced_batches", len(batches))
         if upd is not None:
             self.drift.observe_update(upd)
@@ -229,6 +436,14 @@ class OnlineCompactionService:
             dirty = self.drift.dirty_classes(self._snapshot.fgraph)
             if dirty:
                 red = self.redetect(dirty)
+        # checkpoint LAST: a checkpoint between commit and this step's
+        # re-detection would restore to a state whose redetect never
+        # re-runs (the batch is already inside the checkpoint), silently
+        # diverging from the uninterrupted run's mint order
+        if self.checkpointer is not None:
+            self._since_checkpoint += len(batches)
+            if self._since_checkpoint >= self.checkpoint_every:
+                self.checkpoint()
         return BatchReport(seq=last.seq, epoch_before=epoch_before,
                            epoch_after=self._snapshot.epoch,
                            latency_ms=latency, update=upd, delete=dele,
@@ -250,8 +465,9 @@ class OnlineCompactionService:
         """Re-detect ONLY ``class_ids``, retried on failure.
 
         The pass runs against the current snapshot under
-        ``dist.fault.retry`` with Monitor heartbeats; on success the
-        successor swaps in and the drift baselines reset.  If every
+        ``dist.fault.retry`` (decorrelated jitter, overall
+        ``retry_deadline_s`` budget) with Monitor heartbeats; on success
+        the successor swaps in and the drift baselines reset.  If every
         attempt fails the old snapshot stays live, the ingest queue is
         untouched, and the classes remain dirty -- the next batch will
         trigger another try.
@@ -261,6 +477,7 @@ class OnlineCompactionService:
             return None
 
         def attempt():
+            self._fire("redetect")
             self._redetect_step += 1
             self.monitor.record("redetect", self._redetect_step)
             out = self.planner.redetect(self._snapshot, cids)
@@ -271,7 +488,12 @@ class OnlineCompactionService:
         try:
             snap, report = fault.retry(
                 attempt, attempts=self.retry_attempts,
-                base_s=self.retry_base_s, sleep=self._retry_sleep)()
+                base_s=self.retry_base_s, sleep=self._retry_sleep,
+                deadline_s=self.retry_deadline_s, rng=self._retry_rng,
+                on_retry=lambda a, d, e: self.metrics.observe(
+                    "fault.retries", 1))()
+        except fault.InjectedFault:
+            raise               # injection models process death
         except Exception:
             # exhausted: stay on the old snapshot, keep the drift
             # counters -- re-detection is an optimization, never a
@@ -279,6 +501,7 @@ class OnlineCompactionService:
             self.metrics.observe("redetect.failures", 1)
             return None
         if snap is not self._snapshot:     # rejected passes don't swap
+            self._log_mints()
             self._swap(snap)
         # re-baseline either way: the decision was made against this
         # state; drift re-accumulates before the classes go dirty again

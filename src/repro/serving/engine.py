@@ -90,6 +90,9 @@ class GraphQueryResponse:
     var_objects: list[tuple[str, ...]]   # aligned with subjects
     strategy: str
     n_rows: int
+    # "ok" | "degraded" (factorized path failed; answered via raw
+    # fallback) | "shed" (per-wave deadline exhausted; NOT evaluated)
+    status: str = "ok"
 
 
 @dataclasses.dataclass
@@ -113,6 +116,7 @@ class BGPQueryResponse:
     rows: list[tuple[str, ...]]      # decoded bindings, aligned
     strategies: tuple[str, ...]      # planner's per-star choices
     n_rows: int
+    status: str = "ok"               # "ok" | "degraded" | "shed"
 
 
 class GraphQueryService:
@@ -147,10 +151,28 @@ class GraphQueryService:
     never torn) and the next wave picks up the swap.  The engine's
     device buffers are epoch-keyed, so a swap invalidates them without
     any cross-thread coordination.
+
+    **Graceful degradation** (all counted, never silent):
+
+    * ``max_pending`` bounds the admission queue -- a full queue sheds
+      the submit (``submit`` returns ``False``; ``admission.shed``
+      channel) instead of growing unboundedly;
+    * ``wave_deadline_s`` budgets one ``run`` wave -- requests the
+      budget cannot reach are answered with ``status="shed"`` and empty
+      bindings (``wave.deadline_shed``), never dropped on the floor;
+    * a factorized-path failure mid-wave falls back to raw ``expand()``
+      evaluation for the affected requests (``status="degraded"``,
+      ``wave.raw_fallback``) -- answers stay correct, only slower.
     """
 
     def __init__(self, source, *, backend: str = "host",
-                 use_kernel: bool = True):
+                 use_kernel: bool = True,
+                 max_pending: int | None = None,
+                 wave_deadline_s: float | None = None,
+                 metrics=None, clock=None):
+        import time
+
+        from repro.online.metrics import MetricsHub
         from repro.query import QueryEngine
         self._source = source
         self.backend = backend
@@ -158,6 +180,13 @@ class GraphQueryService:
         self.engine = QueryEngine(snap.fgraph, use_kernel=use_kernel,
                                   epoch=snap.epoch)
         self.queue: list[GraphQueryRequest] = []
+        self.max_pending = max_pending
+        self.wave_deadline_s = wave_deadline_s
+        self.metrics = metrics if metrics is not None else MetricsHub()
+        self._clock = clock if clock is not None else time.monotonic
+        for ch in ("admission.shed", "wave.deadline_shed",
+                   "wave.raw_fallback"):
+            self.metrics.channel(ch)
 
     def _resolve(self):
         """Current snapshot from the handle (one atomic read)."""
@@ -181,8 +210,17 @@ class GraphQueryService:
     def epoch(self) -> int:
         return int(self._resolve().epoch)
 
-    def submit(self, req: GraphQueryRequest) -> None:
+    def submit(self, req: GraphQueryRequest) -> bool:
+        """Admit ``req`` into the next wave.  Returns ``False`` (and
+        counts ``admission.shed``) when the bounded queue is full --
+        the caller owns retry/backpressure, the service never grows an
+        unbounded backlog."""
+        if self.max_pending is not None \
+                and len(self.queue) >= self.max_pending:
+            self.metrics.observe("admission.shed", 1)
+            return False
         self.queue.append(req)
+        return True
 
     def _compile(self, req: GraphQueryRequest, fgraph):
         from repro.query import StarQuery
@@ -241,19 +279,46 @@ class GraphQueryService:
         q = self._compile_bgp(req, snap.fgraph)
         if q is None:        # unknown term: nothing can match it
             return BGPQueryResponse(req.rid, (), [], (), 0)
-        b, stats = self.engine.query_bgp(
-            q, strategy=req.strategy, backend=self.backend,
-            return_stats=True)
         term = snap.fgraph.store.dict.term
+        try:
+            b, stats = self.engine.query_bgp(
+                q, strategy=req.strategy, backend=self.backend,
+                return_stats=True)
+            strategies = stats["plan"].strategies
+            status = "ok"
+        except Exception:
+            if req.strategy == "raw":
+                raise            # the fallback path itself failed
+            # factorized/auto path failed mid-wave: answer from the
+            # raw expansion instead of failing the request (counted)
+            self.metrics.observe("wave.raw_fallback", 1)
+            b, stats = self.engine.query_bgp(
+                q, strategy="raw", backend="host", return_stats=True)
+            strategies = stats["plan"].strategies
+            status = "degraded"
         return BGPQueryResponse(
             rid=req.rid, variables=b.columns,
             rows=[tuple(term(int(v)) for v in row) for row in b.rows],
-            strategies=stats["plan"].strategies, n_rows=b.n_rows)
+            strategies=strategies, n_rows=b.n_rows, status=status)
+
+    def _shed(self, req) -> "GraphQueryResponse | BGPQueryResponse":
+        self.metrics.observe("wave.deadline_shed", 1)
+        if isinstance(req, BGPQueryRequest):
+            return BGPQueryResponse(req.rid, (), [], (), 0,
+                                    status="shed")
+        return GraphQueryResponse(req.rid, [], (), [], req.strategy, 0,
+                                  status="shed")
 
     def run(self) -> dict[int, GraphQueryResponse]:
         batch, self.queue = self.queue, []
         if not batch:
             return {}
+        deadline = (None if self.wave_deadline_s is None
+                    else self._clock() + self.wave_deadline_s)
+
+        def overdue():
+            return deadline is not None and self._clock() >= deadline
+
         # resolve the handle once: the ENTIRE wave -- compilation,
         # batched match, term decoding -- reads this one immutable
         # snapshot, so a concurrent swap cannot tear a wave
@@ -264,14 +329,30 @@ class GraphQueryService:
         bgps = [r for r in batch if isinstance(r, BGPQueryRequest)]
         batch = [r for r in batch if not isinstance(r, BGPQueryRequest)]
         for req in bgps:      # multi-star: planned + joined per request
+            if overdue():     # deadline spent: explicit shed, not a drop
+                out[req.rid] = self._shed(req)
+                continue
             out[req.rid] = self._run_bgp(req, snap)
+        if overdue():
+            for req in batch:
+                out[req.rid] = self._shed(req)
+            return out
         compiled = [(req, self._compile(req, snap.fgraph)) for req in batch]
         # factorized queries of the wave evaluate as ONE batch (device
         # backend: one molecule-match lowering per class chunk)
         fact = [(req, q) for req, q in compiled
                 if q is not None and req.strategy == "factorized"]
-        results = self.engine.query_batch([q for _, q in fact],
-                                          backend=self.backend)
+        degraded: set[int] = set()
+        try:
+            results = self.engine.query_batch([q for _, q in fact],
+                                              backend=self.backend)
+        except Exception:
+            # batched factorized path failed mid-wave: every factorized
+            # request of this wave re-evaluates on the raw expansion
+            self.metrics.observe("wave.raw_fallback", len(fact))
+            results = [self.engine.query(q, strategy="raw")
+                       for _, q in fact]
+            degraded = {req.rid for req, _ in fact}
         by_rid = {req.rid: b for (req, _), b in zip(fact, results)}
         for req, q in compiled:
             if q is None:
@@ -280,6 +361,9 @@ class GraphQueryService:
                 continue
             b = by_rid.get(req.rid)
             if b is None:                       # raw strategy, host only
+                if overdue():
+                    out[req.rid] = self._shed(req)
+                    continue
                 b = self.engine.query(q, strategy=req.strategy)
             out[req.rid] = GraphQueryResponse(
                 rid=req.rid,
@@ -287,7 +371,9 @@ class GraphQueryService:
                 var_props=tuple(term(int(p)) for p in b.var_props),
                 var_objects=[tuple(term(int(v)) for v in row)
                              for row in b.var_objects],
-                strategy=req.strategy, n_rows=b.n_rows)
+                strategy="raw" if req.rid in degraded else req.strategy,
+                n_rows=b.n_rows,
+                status="degraded" if req.rid in degraded else "ok")
         return out
 
 

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 from repro.ckpt import Checkpointer, latest_step
 from repro.data.lm_pipeline import LMPipeline, PipelineSpec
 from repro.dist.elastic import choose_mesh_shape
-from repro.dist.fault import Monitor, retry
+from repro.dist.fault import (SITES, FaultPlan, InjectedFault, Monitor,
+                              retry)
 
 
 def _state():
@@ -104,6 +105,102 @@ def test_retry_backoff():
     with pytest.raises(OSError):
         retry(lambda: (_ for _ in ()).throw(OSError()), attempts=2,
               sleep=lambda _: None)()
+
+
+def test_retry_decorrelated_jitter_bounds():
+    """Jittered delays stay in [base, min(max, 3 * prev)] and are
+    reproducible for a seeded rng."""
+    import random
+
+    def runs(seed):
+        delays = []
+        fn = retry(lambda: (_ for _ in ()).throw(OSError()), attempts=6,
+                   base_s=0.5, max_s=4.0, sleep=delays.append,
+                   rng=random.Random(seed))
+        with pytest.raises(OSError):
+            fn()
+        return delays
+
+    delays = runs(7)
+    assert len(delays) == 5              # attempts - 1 sleeps
+    prev = 0.5
+    for d in delays:
+        assert 0.5 <= d <= min(4.0, prev * 3.0) + 1e-9
+        prev = d
+    assert runs(7) == delays             # seeded: reproducible
+    assert runs(8) != delays
+
+
+def test_retry_deadline_budget_and_attempt_attribution():
+    """The overall deadline stops retrying early, clips the final
+    sleep, and the raised exception carries the attempt count."""
+    clock = [0.0]
+    slept = []
+
+    def sleep(s):
+        slept.append(s)
+        clock[0] += s
+
+    def always():
+        clock[0] += 4.0                  # each attempt burns 4s
+        raise OSError("down")
+
+    with pytest.raises(OSError) as ei:
+        retry(always, attempts=50, base_s=10.0, jitter=False,
+              deadline_s=9.0, sleep=sleep, clock=lambda: clock[0])()
+    e = ei.value
+    assert e.retry_attempts == 2         # 4s + sleep(5) + 4s > 9s budget
+    assert e.retry_elapsed_s >= 9.0
+    assert slept == [5.0]                # 10s backoff clipped to budget
+    # without a deadline the attempt count still rides the exception
+    with pytest.raises(OSError) as ei:
+        retry(always, attempts=3, sleep=lambda _: None)()
+    assert ei.value.retry_attempts == 3
+
+
+def test_retry_on_retry_hook_and_injected_fault_passthrough():
+    seen = []
+
+    def flaky():
+        if len(seen) < 2:
+            raise OSError("transient")
+        return "ok"
+
+    out = retry(flaky, attempts=5, sleep=lambda _: None,
+                on_retry=lambda a, d, e: seen.append((a, type(e))))()
+    assert out == "ok"
+    assert [a for a, _ in seen] == [1, 2]
+    assert all(t is OSError for _, t in seen)
+
+    # an injected fault models process death: retry must NOT absorb it
+    calls = []
+
+    def dies():
+        calls.append(1)
+        raise InjectedFault("apply", 0)
+
+    with pytest.raises(InjectedFault):
+        retry(dies, attempts=5, sleep=lambda _: None)()
+    assert len(calls) == 1
+
+
+def test_fault_plan_seeded_deterministic_and_one_shot():
+    a = FaultPlan.seeded(3)
+    b = FaultPlan.seeded(3)
+    assert (a.site, a.occurrence) == (b.site, b.occurrence)
+    assert a.site in SITES
+    c = FaultPlan.seeded(4, sites=("apply",), max_occurrence=0)
+    assert c.site == "apply" and c.occurrence == 0
+    with pytest.raises(InjectedFault):
+        c.fire("apply")
+    c.fire("apply")                      # one-shot: never trips again
+    assert c.seen("apply") == 2
+    c.fire("redetect")                   # other sites just count
+    assert c.seen("redetect") == 1
+    with pytest.raises(ValueError):
+        FaultPlan("no.such.site")
+    with pytest.raises(ValueError):
+        FaultPlan("apply", mode="explode")
 
 
 def test_pipeline_rebalance_preserves_batch():

@@ -454,9 +454,37 @@ def test_service_exports_expected_channels():
     svc.drain()
     summ = svc.metrics_summary()
     for name in ("queue.depth", "ingest.batch_ms", "swap.count",
-                 "redetect.ms", "redetect.dirty_classes"):
+                 "redetect.ms", "redetect.dirty_classes",
+                 "fault.retries", "fault.dead_workers",
+                 "ingest.unknown_deletes"):
         assert name in summ, name
     assert any(k.startswith("savings.") for k in summ)
+
+
+def test_unknown_deletes_counted_not_silently_dropped():
+    """A delete naming a term the dictionary has never seen cannot name
+    an existing triple -- it drops as a no-op, but the drop is COUNTED
+    in ``ingest.unknown_deletes`` (the regression this guards: submit
+    used to discard such rows silently)."""
+    store, svc = _service(60, seed=11)
+    cid = next(iter(svc.snapshot.fgraph.tables))
+    ins, names = _novel_inserts(store, cid, "ud", 3)
+    svc.submit(inserts=ins)
+    svc.drain()
+    before = svc.snapshot.n_triples
+
+    # 1 known + 2 unknown entity deletes, 1 unknown triple delete
+    svc.submit(delete_entities=[names[0], "e:never/one", "e:never/two"])
+    svc.submit(delete_triples=[("e:ghost", "p:ghost", "o:ghost")])
+    svc.drain()
+    ch = svc.metrics_summary()["ingest.unknown_deletes"]
+    assert ch["total"] == 3 and ch["count"] == 2
+    assert svc.snapshot.n_triples < before       # the known delete landed
+
+    # id-level (ndarray) submissions bypass term decoding: no counting
+    svc.submit(delete_entities=np.asarray([], np.int64))
+    assert svc.metrics_summary()["ingest.unknown_deletes"]["count"] == 2
+    svc.drain()
 
 
 # ---------------------------------------------------------------------------
