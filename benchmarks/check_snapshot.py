@@ -55,7 +55,20 @@ Asserts the structural invariants the bench-smoke job exists to protect:
    substrate (peak RSS ~ largest class bucket, not the graph), stays
    under per-scale whole-process RSS budgets, and the per-cell
    no-recompaction-twin soak never shows recompaction losing edges.
-9. **Crash durability holds** -- the recovery matrix (raise-mode
+9. **Sharding pays and stays lossless** -- every (devices x graph size)
+   cell of the shard matrix must show digest parity sharded ==
+   replicated for detection AND the star workload (the Def. 4.10
+   invariance under partitioning), an unchanged digest across device
+   counts at the same scale, zero warm retraces on the fan-out device
+   query path, a real cross-shard collective on every multi-device
+   cell with a chunk-split class, 4-device detection's parallel
+   critical path (max per-shard worker CPU time) at most
+   ``MAX_SHARD_DETECT_RATIO`` x the 1-device detect on the 1M sensor
+   cell -- plus the raw wall-clock comparison whenever the recording
+   host had a core per shard -- and per-shard resident bytes at most
+   ``MAX_SHARD_RESIDENT_FRAC`` of the replicated graph on every
+   >=4-device cell.
+10. **Crash durability holds** -- the recovery matrix (raise-mode
    crash-point sweep over every fault-injection site) must show every
    site x occurrence cell actually crashing, recovering from the WAL +
    checkpoint with a drained queue, and finishing digest-identical to
@@ -171,6 +184,86 @@ def check(path: str = DEFAULT_PATH) -> list[str]:
     errors.extend(check_drift(snap.get("drift")))
     errors.extend(check_recovery(snap.get("recovery")))
     errors.extend(check_scale(snap.get("scale")))
+    errors.extend(check_shard(snap.get("shard_matrix")))
+    return errors
+
+
+# 4-device detection must reach <= this fraction of the 1-device detect
+# on the 1M sensor cell.  The comparison runs on the parallel critical
+# path (max per-shard worker CPU time): that is the quantity the
+# partition balance controls, and the wall-clock the fork fan-out
+# reaches with a core per shard.  The raw wall-clock is gated too
+# whenever the recording host actually had >= 4 cores.
+MAX_SHARD_DETECT_RATIO = 0.6
+# on >= 4-device cells, no shard may hold more than this fraction of
+# the replicated graph's resident bytes (substrate + molecule tables,
+# shared dictionary excluded on both sides)
+MAX_SHARD_RESIDENT_FRAC = 0.35
+SHARD_GATE_SCALE = 1_000_000
+
+
+def check_shard(shard: dict | None) -> list[str]:
+    """Gate the (devices x graph size) shard matrix (item 9)."""
+    errors: list[str] = []
+    if not shard or not shard.get("cells"):
+        errors.append("snapshot has no shard matrix "
+                      "(rerun --snapshot --shard)")
+        return errors
+    cells = shard["cells"]
+    by_key = {(c["devices"], c["n_triples"]): c for c in cells}
+    scales = sorted({c["n_triples"] for c in cells})
+    if max((c["devices"] for c in cells), default=0) < 4:
+        errors.append("shard matrix has no >= 4-device cell")
+    digests: dict[int, str] = {}
+    for c in sorted(cells, key=lambda c: (c["n_triples"], c["devices"])):
+        tag = f"shard[{c['devices']}dev@{c['n_triples']}]"
+        if not c.get("detect_parity"):
+            errors.append(f"{tag} sharded detect digest diverged from "
+                          f"the replicated baseline")
+        if not c.get("query_parity"):
+            errors.append(f"{tag} fan-out binding sets diverged from "
+                          f"the replicated engine")
+        ref = digests.setdefault(c["n_triples"], c["detect_digest"])
+        if c["detect_digest"] != ref:
+            errors.append(f"{tag} digest moved across device counts "
+                          f"({c['detect_digest']} != {ref})")
+        if c.get("trace_count_warm", 0) != 0:
+            errors.append(f"{tag} fan-out device query path retraced on "
+                          f"the warm pass ({c['trace_count_warm']})")
+        if c["devices"] > 1 and c.get("split_classes", 0) > 0 \
+                and c["traffic"].get("collective_calls", 0) == 0:
+            errors.append(f"{tag} has chunk-split classes but never ran "
+                          f"the cross-shard AMI collective")
+        if c["devices"] >= 4:
+            frac = c["max_shard_resident_bytes"] / max(
+                c["repl_resident_bytes"], 1)
+            if frac > MAX_SHARD_RESIDENT_FRAC:
+                errors.append(
+                    f"{tag} a shard holds {frac:.0%} of the replicated "
+                    f"resident bytes (over {MAX_SHARD_RESIDENT_FRAC:.0%}"
+                    f": the partition no longer scales memory down)")
+    for n in scales:
+        one = by_key.get((1, n))
+        four = by_key.get((4, n))
+        if n != max(scales) or not one or not four:
+            continue
+        base = max(one["detect_critical_path_ms"], MIN_HOST_MS)
+        crit = four["detect_critical_path_ms"]
+        if crit > MAX_SHARD_DETECT_RATIO * base:
+            errors.append(
+                f"shard[4dev@{n}] parallel detect critical path "
+                f"{crit:.0f} ms exceeds {MAX_SHARD_DETECT_RATIO}x the "
+                f"1-device detect {base:.0f} ms")
+        if four.get("cpu_count", 1) >= 4 \
+                and four["detect_ms"] > \
+                MAX_SHARD_DETECT_RATIO * max(one["detect_ms"],
+                                             MIN_HOST_MS):
+            errors.append(
+                f"shard[4dev@{n}] detect wall-clock "
+                f"{four['detect_ms']:.0f} ms exceeds "
+                f"{MAX_SHARD_DETECT_RATIO}x the 1-device "
+                f"{one['detect_ms']:.0f} ms on a "
+                f"{four['cpu_count']}-core host")
     return errors
 
 
@@ -457,7 +550,7 @@ RECOVERY_SITES = ("wal.append", "apply", "pre_swap", "post_swap",
 
 
 def check_recovery(recovery: dict | None) -> list[str]:
-    """Gate the crash-point recovery matrix (module docstring, item 9)."""
+    """Gate the crash-point recovery matrix (module docstring, item 10)."""
     errors: list[str] = []
     if not recovery:
         errors.append("snapshot has no recovery matrix (rerun --snapshot)")

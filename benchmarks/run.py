@@ -40,6 +40,15 @@ SCALE_GRID = [
 ]
 SCALE_SMOKE = [(10_000, ("sensor", "skewed"))]
 
+# (devices x graph size) shard matrix: every cell partitions the sensor
+# graph into `devices` shards, detects shard-local (fork-parallel on
+# multi-device cells) against an in-process replicated baseline, and
+# fans the star workload out through the ShardedQueryEngine.  The
+# subprocess gets a forced N-device jax host platform so the cross-
+# shard AMI collective runs over a real mesh.
+SHARD_GRID = [(d, n) for n in (100_000, 1_000_000) for d in (1, 2, 4, 8)]
+SHARD_SMOKE = [(2, 100_000)]
+
 
 def _run_scale_cell(shape: str, n: int, tier: str, *,
                     twin: int = 0, timeout: int = 900) -> dict:
@@ -59,6 +68,69 @@ def _run_scale_cell(shape: str, n: int, tier: str, *,
         raise RuntimeError(
             f"scale cell {shape}@{n}/{tier} failed:\n{r.stderr[-2000:]}")
     return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def _run_shard_cell(devices: int, n: int, *, timeout: int = 1200) -> dict:
+    cmd = [sys.executable, "-m", "benchmarks.shard_cell",
+           "--devices", str(devices), "--n", str(n)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={devices}"
+    r = subprocess.run(cmd, capture_output=True, text=True,
+                       timeout=timeout, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"shard cell {devices}dev@{n} failed:\n{r.stderr[-2000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def shard_matrix(grid=None) -> dict:
+    """The (devices x graph size) shard matrix: detect + query wall-
+    clock, per-shard resident bytes, and cross-shard traffic per cell,
+    each cell in its own subprocess with a forced `devices`-device host
+    platform.  Digest parity (sharded == replicated, per cell AND
+    across device counts at the same scale) is asserted here at bench
+    time; the committed numbers are re-gated by
+    ``benchmarks.check_snapshot``."""
+    cells = []
+    digests: dict[int, str] = {}
+    for devices, n in (grid or SHARD_GRID):
+        c = _run_shard_cell(devices, n)
+        assert c["detect_parity"], (devices, n, "sharded digest != "
+                                    "replicated digest")
+        assert c["query_parity"], (devices, n, "sharded query digest != "
+                                   "replicated query digest")
+        ref = digests.setdefault(n, c["detect_digest"])
+        assert c["detect_digest"] == ref, \
+            (devices, n, "digest moved across device counts")
+        cells.append(c)
+        frac = c["max_shard_resident_bytes"] / max(
+            c["repl_resident_bytes"], 1)
+        print(f"shard d={devices} n={n:>9,} "
+              f"detect {c['detect_ms']:8.1f} ms "
+              f"(crit {c['detect_critical_path_ms']:7.1f} ms)  "
+              f"query warm {c['query_warm_ms']:7.1f} ms  "
+              f"shard bytes {frac:.0%} of repl  "
+              f"xfer {c['traffic']['detect_bytes'] + c['traffic']['query_bytes']:>9,} B  "
+              f"parity ok")
+    return {"cells": cells}
+
+
+def shard_smoke() -> None:
+    """CI smoke: the smallest multi-device shard cell, live, with the
+    shard gates asserted in-process (digest parity both ways, zero warm
+    retraces, a real collective over the forced 2-device mesh)."""
+    res = shard_matrix(grid=SHARD_SMOKE)
+    for c in res["cells"]:
+        assert c["trace_count_warm"] == 0, c
+        assert c["devices"] == 1 or c["traffic"]["collective_calls"] > 0, \
+            "multi-device cell never ran the cross-shard collective"
+        assert c["max_shard_resident_bytes"] < c["repl_resident_bytes"], \
+            "a shard holds no fewer bytes than the replicated graph"
+    print(f"shard-smoke OK ({len(res['cells'])} cells)")
 
 
 def scale_matrix(grid=None) -> dict:
@@ -93,7 +165,8 @@ def scale_matrix(grid=None) -> dict:
     return {"cells": cells}
 
 
-def snapshot(fast: bool = True, scale: str | None = None) -> dict:
+def snapshot(fast: bool = True, scale: str | None = None,
+             shard: str | None = None) -> dict:
     """FSP perf snapshot on the synthetic sensor graph.
 
     Each detector x backend cell runs TWICE: the cold pass pays jit
@@ -177,19 +250,22 @@ def snapshot(fast: bool = True, scale: str | None = None) -> dict:
         "drift": drift_matrix(fast=fast),
         "recovery": recovery_matrix(fast=fast),
     }
-    # the scale grid is minutes of subprocesses: refresh it only when
-    # asked ("full"), otherwise carry the committed section forward so
-    # `--snapshot` (CI bench-smoke) keeps gating the recorded numbers
+    # the scale and shard grids are minutes of subprocesses: refresh
+    # only when asked ("full"), otherwise carry the committed sections
+    # forward so `--snapshot` (CI bench-smoke) keeps gating them
     if scale == "full":
         out["scale"] = scale_matrix()
-    else:
+    if shard == "full":
+        out["shard_matrix"] = shard_matrix()
+    if scale != "full" or shard != "full":
         try:
             with open(SNAPSHOT_PATH) as f:
                 prev = json.load(f)
-            if "scale" in prev:
-                out["scale"] = prev["scale"]
         except (OSError, ValueError):
-            pass
+            prev = {}
+        for key, fresh in (("scale", scale), ("shard_matrix", shard)):
+            if fresh != "full" and key in prev:
+                out[key] = prev[key]
     with open(SNAPSHOT_PATH, "w") as f:
         json.dump(out, f, indent=1)
         f.write("\n")
@@ -609,9 +685,13 @@ def main() -> None:
     if "--scale-smoke" in argv:
         scale_smoke()
         return
+    if "--shard-smoke" in argv:
+        shard_smoke()
+        return
     if "--snapshot" in argv:
         snapshot(fast=True,
-                 scale="full" if "--scale" in argv else None)
+                 scale="full" if "--scale" in argv else None,
+                 shard="full" if "--shard" in argv else None)
         return
     from . import (bench_formula, bench_fsp_efficiency, bench_kernels,
                    bench_nodes_edges, bench_repeats, bench_savings)

@@ -731,6 +731,10 @@ class CompressedTripleStore(TripleStore):
         self._dec_spo: np.ndarray | None = None
         super().__init__(dictionary, spo, presorted=presorted)
 
+    @property
+    def is_compressed(self) -> bool:
+        return True
+
     # -- virtualized _spo --------------------------------------------------
     @property
     def _spo(self) -> np.ndarray:

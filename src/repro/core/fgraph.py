@@ -358,6 +358,13 @@ class FactorizedGraph:
                 next_ordinal=int(res.surrogates.shape[0]))
         return cls(graph, tables, **kw)
 
+    def with_store(self, store: TripleStore) -> "FactorizedGraph":
+        """Re-host the same tables on a semantically identical store
+        (tier migration: the background recompression packs the store
+        and swaps it under the unchanged molecule tables)."""
+        return FactorizedGraph(store, dict(self.tables),
+                               payoff_min_support=self.payoff_min_support)
+
     # -- size / accounting -------------------------------------------------
     @property
     def n_triples(self) -> int:

@@ -231,6 +231,13 @@ class TripleStore:
                               compact_dict=compact_dict)
 
     @property
+    def is_compressed(self) -> bool:
+        """Tier predicate: ``True`` on the compressed tier (overridden
+        there) -- mutation paths use it to migrate instead of repacking
+        per batch."""
+        return False
+
+    @property
     def n_triples(self) -> int:
         return int(self._spo.shape[0])
 

@@ -7,4 +7,4 @@ carries ``PartitionSpec`` hints it is handed) and the launchers
 All layout decisions live in :mod:`repro.dist.sharding`; everything else
 consumes its ``Plan``.
 """
-from . import compression, elastic, fault, sharding  # noqa: F401
+from . import compression, elastic, fault, graph, sharding  # noqa: F401

@@ -107,6 +107,7 @@ class OnlineCompactionService:
                  retry_deadline_s: float | None = 60.0,
                  retry_sleep=None,
                  auto_redetect: bool = True,
+                 recompress_threshold: int | None = None,
                  coalesce: bool = True,
                  max_coalesce: int | None = None,
                  wal: DurableWAL | None = None,
@@ -136,7 +137,7 @@ class OnlineCompactionService:
         # pre-register the soak's gate channels so a clean run exports
         # them with count 0 instead of omitting them
         for ch in ("fault.retries", "fault.dead_workers",
-                   "ingest.unknown_deletes"):
+                   "ingest.unknown_deletes", "ingest.recompressions"):
             self.metrics.channel(ch)
         self.monitor = monitor or fault.Monitor(
             deadline_s=redetect_deadline_s,
@@ -151,6 +152,14 @@ class OnlineCompactionService:
             else time.sleep
         self._retry_rng = random.Random(0)
         self.auto_redetect = bool(auto_redetect)
+        # background recompression of the mutable tail (ROADMAP 3'):
+        # mutation migrates a compressed-tier store to the plain tier
+        # (apply_update decodes once instead of repacking per batch);
+        # once ``recompress_threshold`` ingested rows have accumulated
+        # on the plain form, the step re-packs it off the hot path
+        self.recompress_threshold = (None if recompress_threshold is None
+                                     else int(recompress_threshold))
+        self._plain_tail = 0
         self.coalesce = bool(coalesce)
         self.max_coalesce = max_coalesce
         self.swap_count = 0
@@ -436,6 +445,8 @@ class OnlineCompactionService:
             dirty = self.drift.dirty_classes(self._snapshot.fgraph)
             if dirty:
                 red = self.redetect(dirty)
+        self._plain_tail += int(inserts.shape[0])
+        self._maybe_recompress()
         # checkpoint LAST: a checkpoint between commit and this step's
         # re-detection would restore to a state whose redetect never
         # re-runs (the batch is already inside the checkpoint), silently
@@ -448,6 +459,29 @@ class OnlineCompactionService:
                            epoch_after=self._snapshot.epoch,
                            latency_ms=latency, update=upd, delete=dele,
                            redetect=red)
+
+    def _maybe_recompress(self) -> None:
+        """Re-pack the plain mutable tail once it outgrows the
+        threshold: build the compressed store off the hot path (the
+        writer is between batches; readers keep the old snapshot) and
+        swap it under the unchanged molecule tables.  ``compact_dict=
+        False`` is mandatory -- the WAL journals dictionary mints by id,
+        so the shared dict *object* must survive the repack."""
+        if self.recompress_threshold is None \
+                or self._plain_tail < self.recompress_threshold:
+            return
+        snap = self._snapshot
+        store = snap.fgraph.store
+        if getattr(store, "is_compressed", False):
+            self._plain_tail = 0
+            return
+        t0 = time.perf_counter()
+        packed = store.compressed(compact_dict=False)
+        self._swap(snap.next(snap.fgraph.with_store(packed)))
+        self._plain_tail = 0
+        self.metrics.observe("ingest.recompressions", 1)
+        self.metrics.observe("ingest.recompress_ms",
+                             (time.perf_counter() - t0) * 1e3)
 
     def drain(self, max_batches: int | None = None) -> list[BatchReport]:
         """Apply queued batches FIFO until empty (or ``max_batches``)."""

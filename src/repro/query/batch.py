@@ -147,31 +147,45 @@ class QueryEngine:
 
     def __init__(self, fgraph: FactorizedGraph,
                  raw_store=None, *, use_kernel: bool = True,
-                 epoch: int = 0) -> None:
+                 epoch: int = 0, metrics=None) -> None:
         self.fgraph = fgraph
         self._raw = raw_store
         self.use_kernel = bool(use_kernel)
         self.epoch = int(epoch)
+        self.metrics = metrics
         # device buffers are keyed (epoch, class): an engine rebound to
-        # a new snapshot epoch can never serve a stale molecule table,
-        # and buffers of dropped epochs are evicted on rebind
+        # a new snapshot epoch can never serve a stale molecule table.
+        # The cache is BOUNDED to the latest two epochs -- a reader may
+        # still hold the previous snapshot mid-wave, but anything older
+        # is unreachable and evicts on rebind (otherwise a long-running
+        # online recompaction leaks device buffers one epoch at a time)
         self._bufs: dict[tuple[int, int], _TableBuffer] = {}
+        self.buffer_evictions = 0
         # planner/deferral probe cache (class stats, per-prop deferral
         # guards) -- valid for one fgraph only, dropped on rebind
         self._bgp_cache: dict = {}
 
     def rebind(self, fgraph: FactorizedGraph, epoch: int) -> None:
-        """Swap in a new snapshot's fgraph.  Old-epoch device buffers
-        are invalidated (evicted); the raw-store cache drops with them.
-        The jit cache is untouched -- same bucket shapes re-lower zero
-        times after a swap."""
+        """Swap in a new snapshot's fgraph.  Device buffers older than
+        the previous epoch are evicted (counted in the
+        ``query.buffer_evictions`` channel when a metrics hub is
+        attached); the raw-store cache drops with them.  The jit cache
+        is untouched -- same bucket shapes re-lower zero times after a
+        swap."""
         if epoch == self.epoch and fgraph is self.fgraph:
             return
+        keep = {int(epoch), self.epoch}
         self.fgraph = fgraph
         self.epoch = int(epoch)
         self._raw = None
+        n_before = len(self._bufs)
         self._bufs = {k: v for k, v in self._bufs.items()
-                      if k[0] == self.epoch}
+                      if k[0] in keep}
+        evicted = n_before - len(self._bufs)
+        if evicted:
+            self.buffer_evictions += evicted
+            if self.metrics is not None:
+                self.metrics.observe("query.buffer_evictions", evicted)
         self._bgp_cache = {}
 
     @property

@@ -5,4 +5,4 @@ from .prefix_factorization import (  # noqa: F401
 from .engine import (BGPQueryRequest, BGPQueryResponse, Engine,  # noqa: F401
                      GraphQueryRequest, GraphQueryResponse,
                      GraphQueryService, PREFIX_POLICIES, PrefixPolicy,
-                     Request)
+                     Request, ShardedQueryService)

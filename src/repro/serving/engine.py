@@ -119,6 +119,61 @@ class BGPQueryResponse:
     status: str = "ok"               # "ok" | "degraded" | "shed"
 
 
+def _compile_star(req: GraphQueryRequest, d):
+    """Term-level star request -> id-level :class:`StarQuery` (``None``
+    when any term is unknown to the dictionary: nothing can match it)."""
+    from repro.query import StarQuery
+    cid = None
+    if req.class_term is not None:
+        cid = d.lookup(req.class_term)
+        if cid is None:
+            return None
+    arms = []
+    for p, o in req.arms:
+        pid = d.lookup(p)
+        if pid is None:
+            return None
+        if o is None:
+            arms.append((pid, None))
+        else:
+            oid = d.lookup(o)
+            if oid is None:
+                return None
+            arms.append((pid, oid))
+    return StarQuery(arms=tuple(arms), class_id=cid)
+
+
+def _compile_bgp_query(req: BGPQueryRequest, d):
+    from repro.query import BGPQuery, Filter, StarPattern
+    from repro.query.bgp import is_var
+
+    def enc(t):
+        return t if is_var(t) else d.lookup(t)
+
+    stars = []
+    for subject, arms, class_term in req.stars:
+        cid = None
+        if class_term is not None:
+            cid = d.lookup(class_term)
+            if cid is None:
+                return None
+        enc_arms = []
+        for p, o in arms:
+            pid, oid = d.lookup(p), enc(o)
+            if pid is None or oid is None:
+                return None
+            enc_arms.append((pid, oid))
+        stars.append(StarPattern(subject, tuple(enc_arms),
+                                 class_id=cid))
+    filters = []
+    for var, op, value in req.filters:
+        vid = d.lookup(value)
+        if vid is None:
+            return None
+        filters.append(Filter(var, op, vid))
+    return BGPQuery(stars=tuple(stars), filters=tuple(filters))
+
+
 class GraphQueryService:
     """Star-query endpoint over a compacted graph (the paper's "queries
     get faster on G'" claim, served).
@@ -223,57 +278,10 @@ class GraphQueryService:
         return True
 
     def _compile(self, req: GraphQueryRequest, fgraph):
-        from repro.query import StarQuery
-        d = fgraph.store.dict
-        cid = None
-        if req.class_term is not None:
-            cid = d.lookup(req.class_term)
-            if cid is None:
-                return None
-        arms = []
-        for p, o in req.arms:
-            pid = d.lookup(p)
-            if pid is None:
-                return None
-            if o is None:
-                arms.append((pid, None))
-            else:
-                oid = d.lookup(o)
-                if oid is None:
-                    return None
-                arms.append((pid, oid))
-        return StarQuery(arms=tuple(arms), class_id=cid)
+        return _compile_star(req, fgraph.store.dict)
 
     def _compile_bgp(self, req: BGPQueryRequest, fgraph):
-        from repro.query import BGPQuery, Filter, StarPattern
-        from repro.query.bgp import is_var
-        d = fgraph.store.dict
-
-        def enc(t):
-            return t if is_var(t) else d.lookup(t)
-
-        stars = []
-        for subject, arms, class_term in req.stars:
-            cid = None
-            if class_term is not None:
-                cid = d.lookup(class_term)
-                if cid is None:
-                    return None
-            enc_arms = []
-            for p, o in arms:
-                pid, oid = d.lookup(p), enc(o)
-                if pid is None or oid is None:
-                    return None
-                enc_arms.append((pid, oid))
-            stars.append(StarPattern(subject, tuple(enc_arms),
-                                     class_id=cid))
-        filters = []
-        for var, op, value in req.filters:
-            vid = d.lookup(value)
-            if vid is None:
-                return None
-            filters.append(Filter(var, op, vid))
-        return BGPQuery(stars=tuple(stars), filters=tuple(filters))
+        return _compile_bgp_query(req, fgraph.store.dict)
 
     def _run_bgp(self, req: BGPQueryRequest, snap) -> BGPQueryResponse:
         q = self._compile_bgp(req, snap.fgraph)
@@ -374,6 +382,225 @@ class GraphQueryService:
                 strategy="raw" if req.rid in degraded else req.strategy,
                 n_rows=b.n_rows,
                 status="degraded" if req.rid in degraded else "ok")
+        return out
+
+
+class ShardedQueryService:
+    """Fan-out request path over a ``repro.dist.ShardedFactorizedGraph``.
+
+    One bounded :class:`GraphQueryService` per shard is the async
+    request surface -- each shard keeps its own wave queue, and every
+    per-shard knob (``max_pending`` admission bound, ``wave_deadline_s``
+    shedding, the raw-expansion degraded fallback) applies *per shard*,
+    exactly as on the replicated service.  Routing at submit:
+
+    * class-constrained star requests enqueue on every shard that owns
+      a chunk of the class (``ShardPlan.shards_for_class``).  Admission
+      is all-or-nothing across the owners: if ANY owner's queue is full
+      the whole submit sheds (``admission.shed``), never a torn
+      fan-out.
+    * classless star requests and BGP requests go to a coordinator
+      queue (their answers need cross-shard per-arm unions / joins, not
+      concatenation) evaluated by ``repro.dist.ShardedQueryEngine`` --
+      only binding sets cross shards, bounded by the service's own
+      ``max_pending`` and deadline.
+
+    :meth:`run` drains every shard queue in parallel (one thread per
+    shard) and merges per-request: typed subjects are uniquely owned,
+    so the per-shard binding sets concatenate duplicate-free; the
+    merged status is ``"shed"`` if any owner shed, else ``"degraded"``
+    if any owner degraded, else ``"ok"``.
+
+    Restart story: a shard rebuilt through ``repro.online.recover()``
+    swaps back in with ``sharded.swap_shard(sid, service.snapshot)``;
+    the next wave's per-shard handle resolution picks up the new epoch
+    with no coordination beyond the atomic tuple store.
+    """
+
+    def __init__(self, sharded, *, backend: str = "host",
+                 use_kernel: bool = True,
+                 max_pending: int | None = None,
+                 wave_deadline_s: float | None = None,
+                 metrics=None, clock=None):
+        import time
+
+        from repro.dist.graph import ShardedQueryEngine
+        from repro.online.metrics import MetricsHub
+        self.sharded = sharded
+        self.backend = backend
+        self.metrics = metrics if metrics is not None else MetricsHub()
+        self._clock = clock if clock is not None else time.monotonic
+        self.max_pending = max_pending
+        self.wave_deadline_s = wave_deadline_s
+        self.shards = [
+            GraphQueryService(
+                (lambda sid=sid: self.sharded.snapshots[sid]),
+                backend=backend, use_kernel=use_kernel,
+                max_pending=max_pending,
+                wave_deadline_s=wave_deadline_s,
+                metrics=self.metrics, clock=self._clock)
+            for sid in range(sharded.n_shards)]
+        self.coordinator = ShardedQueryEngine(sharded,
+                                              use_kernel=use_kernel)
+        self.queue: list = []            # coordinator-evaluated requests
+        self._fanout: dict[int, tuple[int, ...]] = {}  # rid -> shard ids
+        self._raw_engine = None          # degraded fallback, epoch-keyed
+
+    @property
+    def n_shards(self) -> int:
+        return self.sharded.n_shards
+
+    def _owners(self, req: GraphQueryRequest) -> tuple[int, ...] | None:
+        """Owning shards for a class-routed star request; ``None`` when
+        the request must evaluate at the coordinator instead."""
+        if req.class_term is None:
+            return None
+        cid = self.sharded.dict.lookup(req.class_term)
+        if cid is None:
+            # unknown class: empty answer from any single shard
+            return (0,)
+        return self.sharded.plan.shards_for_class(int(cid))
+
+    def submit(self, req) -> bool:
+        """Admit ``req``; ``False`` (+ ``admission.shed``) when any
+        target queue is full -- all-or-nothing across the fan-out."""
+        if isinstance(req, BGPQueryRequest):
+            owners = None
+        else:
+            owners = self._owners(req)
+        if owners is None:
+            if self.max_pending is not None \
+                    and len(self.queue) >= self.max_pending:
+                self.metrics.observe("admission.shed", 1)
+                return False
+            self.queue.append(req)
+            return True
+        # capacity pre-check across every owner BEFORE any enqueue
+        if any(s.max_pending is not None
+               and len(s.queue) >= s.max_pending
+               for s in (self.shards[sid] for sid in owners)):
+            self.metrics.observe("admission.shed", 1)
+            return False
+        for sid in owners:
+            self.shards[sid].submit(req)
+        self._fanout[req.rid] = tuple(owners)
+        return True
+
+    def _merge_star(self, req: GraphQueryRequest,
+                    parts: list[GraphQueryResponse]) -> GraphQueryResponse:
+        subjects: list[str] = []
+        var_objects: list[tuple[str, ...]] = []
+        var_props: tuple[str, ...] = ()
+        for p in parts:
+            subjects.extend(p.subjects)
+            var_objects.extend(p.var_objects)
+            if p.var_props:
+                var_props = p.var_props
+        status = "ok"
+        if any(p.status == "degraded" for p in parts):
+            status = "degraded"
+        if any(p.status == "shed" for p in parts):
+            status = "shed"     # partial: at least one owner unanswered
+        self.sharded.traffic["query_bytes"] += sum(
+            8 * (len(p.subjects) + sum(len(r) for r in p.var_objects))
+            for p in parts)
+        return GraphQueryResponse(
+            rid=req.rid, subjects=subjects, var_props=var_props,
+            var_objects=var_objects, strategy=parts[0].strategy
+            if parts else req.strategy, n_rows=len(subjects),
+            status=status)
+
+    def _degraded(self):
+        """Replicated raw-expansion engine (built lazily per epoch) --
+        the answers-stay-correct fallback when the sharded path fails."""
+        from repro.core.fgraph import FactorizedGraph
+        from repro.query import QueryEngine
+        epoch = self.sharded.epoch
+        if self._raw_engine is None or self._raw_engine[0] != epoch:
+            fg = FactorizedGraph(self.sharded.expand_union(), {})
+            self._raw_engine = (epoch, QueryEngine(fg, use_kernel=False))
+        return self._raw_engine[1]
+
+    def _run_coordinator(self, out: dict) -> None:
+        deadline = (None if self.wave_deadline_s is None
+                    else self._clock() + self.wave_deadline_s)
+        batch, self.queue = self.queue, []
+        d = self.sharded.dict
+        for req in batch:
+            if deadline is not None and self._clock() >= deadline:
+                self.metrics.observe("wave.deadline_shed", 1)
+                if isinstance(req, BGPQueryRequest):
+                    out[req.rid] = BGPQueryResponse(req.rid, (), [], (),
+                                                    0, status="shed")
+                else:
+                    out[req.rid] = GraphQueryResponse(
+                        req.rid, [], (), [], req.strategy, 0,
+                        status="shed")
+                continue
+            if isinstance(req, BGPQueryRequest):
+                q = _compile_bgp_query(req, d)
+                if q is None:
+                    out[req.rid] = BGPQueryResponse(req.rid, (), [], (), 0)
+                    continue
+                try:
+                    b = self.coordinator.query_bgp(
+                        q, strategy=req.strategy, backend=self.backend)
+                    status = "ok"
+                except Exception:
+                    self.metrics.observe("wave.raw_fallback", 1)
+                    b = self._degraded().query_bgp(q, strategy="raw")
+                    status = "degraded"
+                out[req.rid] = BGPQueryResponse(
+                    rid=req.rid, variables=b.columns,
+                    rows=[tuple(d.term(int(v)) for v in row)
+                          for row in b.rows],
+                    strategies=(), n_rows=b.n_rows, status=status)
+            else:                        # classless star
+                q = _compile_star(req, d)
+                if q is None:
+                    out[req.rid] = GraphQueryResponse(
+                        req.rid, [], (), [], req.strategy, 0)
+                    continue
+                try:
+                    b = self.coordinator.query(q, strategy=req.strategy)
+                    status = "ok"
+                except Exception:
+                    self.metrics.observe("wave.raw_fallback", 1)
+                    b = self._degraded().query(q, strategy="raw")
+                    status = "degraded"
+                out[req.rid] = GraphQueryResponse(
+                    rid=req.rid,
+                    subjects=[d.term(int(s)) for s in b.subjects],
+                    var_props=tuple(d.term(int(p))
+                                    for p in b.var_props),
+                    var_objects=[tuple(d.term(int(v)) for v in row)
+                                 for row in b.var_objects],
+                    strategy=req.strategy, n_rows=b.n_rows,
+                    status=status)
+
+    def run(self) -> dict[int, GraphQueryResponse]:
+        """Drain one wave: shard queues in parallel (one thread per
+        shard -- each thread touches only its own service), coordinator
+        queue on the caller's thread, then the fan-out merge."""
+        from concurrent.futures import ThreadPoolExecutor
+        self._fanout = {}
+        out: dict[int, GraphQueryResponse] = {}
+        self.coordinator.rebind()
+        busy = [s for s in self.shards if s.queue]
+        if busy:
+            with ThreadPoolExecutor(max_workers=len(busy)) as ex:
+                shard_outs = list(ex.map(lambda s: s.run(), busy))
+        else:
+            shard_outs = []
+        self._run_coordinator(out)
+        by_rid: dict[int, list] = {}
+        for responses in shard_outs:
+            for rid, resp in responses.items():
+                by_rid.setdefault(rid, []).append(resp)
+        for rid, parts in by_rid.items():
+            req = GraphQueryRequest(rid=rid, arms=(), class_term=None,
+                                    strategy=parts[0].strategy)
+            out[rid] = self._merge_star(req, parts)
         return out
 
 

@@ -6,7 +6,11 @@ wave deadlines, factorized -> raw fallback)."""
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
+import signal
+import subprocess
+import sys
 
 import numpy as np
 import pytest
@@ -14,6 +18,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.data.synthetic import SensorGraphSpec, generate
 from repro.dist.fault import SITES, FaultPlan, InjectedFault
+from repro.dist.graph import ShardedFactorizedGraph
 from repro.online import (DurableWAL, OnlineCompactionService,
                           SnapshotCheckpointer, recover)
 from repro.online.recovery import wal_dir
@@ -419,6 +424,97 @@ def test_durable_reopen_without_crash_is_identity(tmp_path):
     assert svc2.queue.depth == 0
     assert svc2.last_recovery.batches_pending == 0
     svc2.close()
+
+
+# ---------------------------------------------------------------------------
+# shard-failure recovery: SIGKILL one shard's durable worker mid-soak,
+# restart through recover(), swap back into the sharded graph
+# ---------------------------------------------------------------------------
+
+_SHARD_WORKER = """\
+import json, sys
+from repro.data.synthetic import SensorGraphSpec, generate
+from repro.dist.fault import FaultPlan
+from repro.dist.graph import ShardedFactorizedGraph
+from repro.online import OnlineCompactionService
+
+root, sid, batches_path = sys.argv[1], int(sys.argv[2]), sys.argv[3]
+store = generate(SensorGraphSpec(n_observations=40, seed=5))
+sharded = ShardedFactorizedGraph.partition(store, 3)
+sub = sharded.snapshots[sid].fgraph.store
+svc = OnlineCompactionService.durable(
+    root, sub, checkpoint_every=3, checkpoint_async=False,
+    detector="gfsp", backend="host", raw_residue_threshold=4,
+    support_drift_threshold=3, retry_sleep=lambda _: None,
+    fault_plan=FaultPlan("apply", occurrence=4, mode="kill"))
+with open(batches_path) as f:
+    batches = json.load(f)
+for ins, dels in batches:
+    svc.submit(inserts=[tuple(t) for t in ins], delete_entities=dels)
+    svc.drain()
+print("SURVIVED")          # the armed kill must preempt this line
+"""
+
+
+def test_shard_worker_sigkill_recovers_and_swaps_back(tmp_path):
+    """One shard's durable worker dies by SIGKILL mid-soak (no atexit,
+    no flush -- real process death).  The restart recovers it from its
+    checkpoint + WAL, finishes the batch stream, and the recovered
+    snapshot swaps back into the sharded graph with digest parity
+    against a twin whose worker was never interrupted."""
+    store = _store()
+    sharded = ShardedFactorizedGraph.partition(store, 3)
+    cid = int(store.classes()[0])
+    sid = sharded.plan.shards_for_class(cid)[0]
+    batches = _novel_batches(store, 8)
+    bpath = tmp_path / "batches.json"
+    bpath.write_text(json.dumps(batches))
+    root = tmp_path / "shard_root"
+    script = tmp_path / "worker.py"
+    script.write_text(_SHARD_WORKER)
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    proc = subprocess.run(
+        [sys.executable, str(script), str(root), str(sid), str(bpath)],
+        cwd=repo, env=env, capture_output=True, timeout=300)
+    assert proc.returncode == -signal.SIGKILL, proc.stderr.decode()
+    assert b"SURVIVED" not in proc.stdout
+
+    # uninterrupted twin over the SAME shard sub-store.  It must be the
+    # first thing minting into the parent dictionary so its novel-term
+    # ids line up with the ids the dead worker journaled.
+    from repro.core.triples import TripleStore
+    twin_sub = TripleStore.from_ids(
+        store.dict, sharded.snapshots[sid].fgraph.store.spo.copy(),
+        presorted=True)
+    twin = OnlineCompactionService(twin_sub, **_SVC_KW)
+    for ins, dels in batches:
+        twin.submit(inserts=ins, delete_entities=dels)
+        twin.drain()
+
+    # restart: recover the shard from disk, apply the journaled-but-
+    # unapplied tail, then resubmit what the dead worker never saw
+    svc = recover(str(root), **_SVC_KW)
+    assert svc.last_recovery is not None
+    assert svc.last_recovery.checkpoint_bytes > 0
+    svc.drain()
+    applied = svc.applied_seq + 1
+    assert 0 < applied < len(batches)      # it really died mid-soak
+    for ins, dels in batches[applied:]:
+        svc.submit(inserts=ins, delete_entities=dels)
+        svc.drain()
+    svc.close()
+    assert svc.queue.depth == 0
+    assert svc.snapshot.digest() == twin.snapshot.digest()
+
+    # the recovered shard swaps back in: one atomic tuple store, and
+    # the whole sharded graph matches the never-interrupted twin world
+    other = ShardedFactorizedGraph.partition(store, 3)
+    sharded.swap_shard(sid, svc.snapshot)
+    other.swap_shard(sid, twin.snapshot)
+    assert sharded.digest() == other.digest()
 
 
 # ---------------------------------------------------------------------------

@@ -533,3 +533,72 @@ def test_interleaved_edits_digest_parity(seed, ops):
     comp = Compactor(detector="gfsp", backend="host")
     comp.run(svc.snapshot.fgraph.expand())
     assert comp.snapshot.digest() == svc.snapshot.digest()
+
+
+# ---------------------------------------------------------------------------
+# background recompression of the mutable tail (ROADMAP 3')
+# ---------------------------------------------------------------------------
+
+def test_background_recompression_soak_bounds_substrate():
+    """A compressed-tier service whose plain tail outgrows
+    ``recompress_threshold`` must re-pack off the hot path: substrate
+    bytes stay bounded across 20 batches (each re-pack lands the store
+    back on the compressed tier), the ``ingest.recompressions`` channel
+    counts every re-pack, and the final state is digest-identical to a
+    twin that never recompressed."""
+    from repro.core.triples import TripleStore
+
+    store = generate(SensorGraphSpec(n_observations=120, seed=3))
+    svc = OnlineCompactionService(store.copy(), detector="gfsp",
+                                  backend="host",
+                                  recompress_threshold=40,
+                                  retry_sleep=lambda _: None)
+    twin = OnlineCompactionService(store.copy(), detector="gfsp",
+                                   backend="host",
+                                   retry_sleep=lambda _: None)
+    rng = np.random.default_rng(0)
+    cid = next(iter(svc.snapshot.fgraph.tables))
+    seen, packed_bytes = 0, []
+    for b in range(20):
+        ins, _ = _clone_inserts(store, cid, f"rc{b}", 3, rng)
+        svc.submit(inserts=ins)
+        svc.drain()
+        twin.submit(inserts=ins)
+        twin.drain()
+        cnt = svc.metrics_summary()["ingest.recompressions"]["count"]
+        if cnt > seen:      # a re-pack landed this batch
+            seen = cnt
+            st = svc.snapshot.fgraph.store
+            assert st.is_compressed
+            packed_bytes.append(st.substrate_nbytes(include_dict=False))
+    summ = svc.metrics_summary()
+    assert summ["ingest.recompressions"]["count"] >= 2
+    assert "ingest.recompress_ms" in summ
+    # substrate stays bounded across the soak: every re-pack lands the
+    # store back under half its plain-equivalent footprint
+    st = svc.snapshot.fgraph.store
+    plain_equiv = TripleStore.from_ids(
+        st.dict, np.asarray(st.spo)).substrate_nbytes(include_dict=False)
+    assert max(packed_bytes) < 0.5 * plain_equiv
+    assert svc.snapshot.digest() == twin.snapshot.digest()
+    # dict identity survived every re-pack (WAL mints depend on it)
+    assert st.dict is store.dict
+
+
+def test_recompression_disabled_by_default():
+    """Without a threshold the service never re-packs: a compressed
+    store migrates to the plain tier on first mutation and stays there
+    (the pre-3' behavior, still the default)."""
+    from repro.core.compress import compress_store
+
+    store = generate(SensorGraphSpec(n_observations=60, seed=4))
+    svc = OnlineCompactionService(compress_store(store.copy()),
+                                  detector="gfsp", backend="host",
+                                  retry_sleep=lambda _: None)
+    rng = np.random.default_rng(1)
+    cid = next(iter(svc.snapshot.fgraph.tables))
+    ins, _ = _clone_inserts(store, cid, "norc", 3, rng)
+    svc.submit(inserts=ins)
+    svc.drain()
+    assert not svc.snapshot.fgraph.store.is_compressed
+    assert svc.metrics_summary()["ingest.recompressions"]["count"] == 0

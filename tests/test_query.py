@@ -327,3 +327,33 @@ def test_core_reset_clears_query_exec_counters():
     register_stats_reset(rqs)
     from repro.core.sweep import _EXTRA_STAT_RESETS
     assert _EXTRA_STAT_RESETS.count(rqs) == 1
+
+
+def test_buffer_cache_bounded_to_two_epochs():
+    """Regression: the epoch-keyed device buffer cache must keep only
+    the latest two epochs on rebind (a reader may hold the previous
+    snapshot mid-wave; anything older is unreachable) and count what it
+    evicts in the ``query.buffer_evictions`` channel."""
+    pytest.importorskip("jax")
+    from repro.online.metrics import MetricsHub
+
+    store = _sensor(200, seed=9)
+    fg = _compact(store).fgraph
+    metrics = MetricsHub()
+    eng = QueryEngine(fg, epoch=0, metrics=metrics)
+    cid, t = next(iter(sorted(fg.tables.items())))
+    q = StarQuery(arms=tuple(
+        (p, int(o)) for p, o in zip(t.props, t.objects[0])),
+        class_id=cid)
+    for epoch in range(4):
+        eng.rebind(fg, epoch)
+        eng.query_batch([q], backend="device")    # populates (epoch, cid)
+        held = {e for e, _ in eng._bufs}
+        assert held <= {epoch, epoch - 1}, (epoch, held)
+    assert eng.buffer_evictions >= 2
+    summary = metrics.summary()["query.buffer_evictions"]
+    assert summary["count"] >= 2
+    # same-epoch rebind with the same fgraph is a no-op: nothing evicts
+    n = eng.buffer_evictions
+    eng.rebind(fg, 3)
+    assert eng.buffer_evictions == n
